@@ -1,0 +1,167 @@
+"""§Perf hillclimbing harness: lower a cell under a modified config, record
+the roofline deltas, and append the iteration to the experiment log.
+
+Each experiment = (cell, hypothesis, config transform).  Results land in
+benchmarks/artifacts/perf/<cell>__<tag>.json so EXPERIMENTS.md §Perf can
+show the full hypothesis -> change -> before/after chain.
+
+Run single experiments (each is a fresh process — 512 fake devices):
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb --exp qwen3_zero_dp
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+
+import jax          # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "perf")
+
+
+def _zero_dp(cfg):
+    """Pure ZeRO-DP: batch over ALL 256/512 chips, weights ZeRO-sharded over
+    the full mesh, no TP/SP — the right regime for multi-B-param models
+    where activation volume >> weight volume."""
+    full = ("pod", "data", "model")
+    return dataclasses.replace(
+        cfg,
+        seq_shard_activations=False,
+        fsdp=False,
+        loss_batch_chunks=1,  # chunking breaks batch-sharding over 256 chips
+        sharding_overrides=(
+            ("batch", full), ("embed", full), ("embed_table", None),
+            ("mlp", None), ("heads", None), ("q_dim", None), ("kv_dim", None),
+            ("seq", None), ("vocab", "model"), ("kv_seq", None),
+        ),
+    )
+
+
+def _zero_dp_vocab_full(cfg):
+    """zero_dp + unembed table sharded over the full mesh on d_model."""
+    full = ("pod", "data", "model")
+    return dataclasses.replace(
+        _zero_dp(cfg),
+        sharding_overrides=_zero_dp(cfg).sharding_overrides[:-2]
+        + (("vocab", "model"), ("kv_seq", None), ("embed_table", full)),
+    )
+
+
+def _bf16_numerics(cfg):
+    """Paper numerics at scale: segmented split-float matmuls (3 MXU passes,
+    BD term dropped) instead of exact fp32-accum bf16 dots."""
+    from repro.core.numerics import NumericsConfig
+
+    return dataclasses.replace(
+        cfg, numerics=NumericsConfig(mode="segmented", seg_passes=3,
+                                     use_pallas=False))
+
+
+def _moe_ep_data(cfg):
+    """Experts sharded over 'data' instead of 'model' for train (toward
+    cluster-wide EP), keeping TP for attention."""
+    return dataclasses.replace(
+        cfg, sharding_overrides=(("experts", ("pod", "data")),))
+
+
+def _accum16(cfg):
+    return dataclasses.replace(cfg, grad_accum=16)
+
+
+def _no_sp(cfg):
+    return dataclasses.replace(cfg, seq_shard_activations=False)
+
+
+def _decode_batch_full(cfg):
+    """Decode: shard batch over the full mesh, replicate kv heads; cache
+    stays unsharded on seq (no LSE-combine collectives)."""
+    full = ("pod", "data", "model")
+    return dataclasses.replace(
+        cfg, sharding_overrides=(("batch", full), ("kv_seq", None),
+                                 ("heads", None)))
+
+
+EXPERIMENTS = {
+    # -- pair 1: qwen3-4b train_4k (paper-representative dense LM train) ----
+    "qwen3_base": ("qwen3-4b", "train_4k", None,
+                   "BASELINE (paper-faithful): TP over model + SP on residual"),
+    "qwen3_zero_dp": ("qwen3-4b", "train_4k", _zero_dp,
+                      "H1: activation gather/scatter churn from TP+SP dominates a "
+                      "4B model; ZeRO-DP over all 256 chips cuts collective bytes "
+                      "~20x (weights 8GB vs activations 300GB moved per step)"),
+    "qwen3_zero_dp_seg": ("qwen3-4b", "train_4k",
+                          lambda c: _bf16_numerics(_zero_dp(c)),
+                          "H2 (beyond-paper): + segmented 3-pass numerics drops "
+                          "the BD term -> ~0.9x dot flops vs exact-fp32-accum"),
+    "qwen3_no_sp": ("qwen3-4b", "train_4k", _no_sp,
+                    "H3 (ablation): TP without SP — fewer reshards but "
+                    "activations unsharded on seq (memory regression expected)"),
+    # -- pair 2: deepseek-v3 train_4k (most collective-bound) ---------------
+    "ds_base": ("deepseek-v3-671b", "train_4k", None,
+                "BASELINE: TP+EP(model)+fsdp(data)+SP"),
+    "ds_accum16": ("deepseek-v3-671b", "train_4k", _accum16,
+                   "H1: halving microbatch halves MoE dispatch slab peak and "
+                   "its replicated-gather traffic"),
+    "ds_ep_data": ("deepseek-v3-671b", "train_4k", _moe_ep_data,
+                   "H2: experts over 'data' (16-way EP on the other axis) — "
+                   "dispatch all-to-all crosses data instead of colliding with "
+                   "TP collectives on 'model'"),
+    "ds_shardmap_accum2": ("deepseek-v3-671b", "train_4k",
+                           lambda c: dataclasses.replace(c, grad_accum=2),
+                           "H4: with shard_map EP the dispatch slab no longer "
+                           "replicates, so fewer microbatches (8->2) cut the "
+                           "per-micro ZeRO weight re-gathers 4x at ~3 GiB "
+                           "activation cost"),
+    # -- pair 3: qwen2-vl-72b decode_32k (worst meaningful roofline) --------
+    "vl_decode_base": ("qwen2-vl-72b", "decode_32k", None,
+                       "BASELINE: batch over data, kv cache seq-sharded over "
+                       "model (flash-decode LSE combine)"),
+    "vl_decode_batch_full": ("qwen2-vl-72b", "decode_32k", _decode_batch_full,
+                             "H1: decode is HBM-bound on cache reads; sharding "
+                             "batch over all chips (128 B over 256) fails "
+                             "divisibility -> expect fallback/regression (test "
+                             "the divisibility-fallback honesty)"),
+}
+
+
+def run_experiment(tag: str):
+    from repro.configs import get_arch
+    from repro.launch import dryrun, specs
+
+    arch, shape, transform, hypothesis = EXPERIMENTS[tag]
+    cfg = specs.cell_config(get_arch(arch), shape)
+    if transform is not None:
+        # monkeypatch get_arch inside dryrun.lower_cell via a shim config
+        import repro.launch.dryrun as dr
+
+        orig = dr.get_arch
+        dr.get_arch = lambda a: transform(orig(a))
+    try:
+        rec = dryrun.lower_cell(arch, shape, multi_pod=False)
+    finally:
+        if transform is not None:
+            dr.get_arch = orig
+    rec["tag"] = tag
+    rec["hypothesis"] = hypothesis
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec.get("roofline", {})
+    print(f"[perf] {tag}: {rec['status']} "
+          f"t_c={r.get('t_compute_s', 0):.2f} t_m={r.get('t_memory_s', 0):.2f} "
+          f"t_x={r.get('t_collective_s', 0):.2f} dom={r.get('dominant')} "
+          f"frac={r.get('roofline_fraction', 0):.4f} "
+          f"mem={rec.get('memory', {}).get('peak_estimate_bytes', 0)/2**30:.1f}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", required=True, choices=sorted(EXPERIMENTS))
+    args = ap.parse_args()
+    run_experiment(args.exp)
+
+
+if __name__ == "__main__":
+    main()

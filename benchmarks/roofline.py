@@ -1,0 +1,87 @@
+"""Roofline report: aggregates the dry-run artifacts into the §Roofline table.
+
+Reads benchmarks/artifacts/dryrun/*.json (produced by repro.launch.dryrun)
+and prints, per (arch x shape x mesh): the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction.
+Also emits the markdown table used by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def _row(r):
+    rf = r.get("roofline", {})
+    mem = r.get("memory", {})
+    return dict(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"], status=r["status"],
+        t_c=rf.get("t_compute_s", 0.0), t_m=rf.get("t_memory_s", 0.0),
+        t_x=rf.get("t_collective_s", 0.0), dom=rf.get("dominant", "-"),
+        useful=rf.get("useful_flops_ratio", 0.0),
+        frac=rf.get("roofline_fraction", 0.0),
+        gib=mem.get("peak_estimate_bytes", 0) / 2 ** 30,
+        fits=mem.get("peak_estimate_bytes", 0) <= 16 * 2 ** 30,
+    )
+
+
+def run(csv_rows=None, mesh: str = "16x16"):
+    recs = load_records(mesh)
+    print(f"\n== Roofline ({mesh}; v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI) ==")
+    hdr = (f"{'arch':26s} {'shape':12s} {'stat':6s} {'t_comp':>8s} {'t_mem':>8s} "
+           f"{'t_coll':>8s} {'dom':>6s} {'useful':>7s} {'frac':>6s} {'GiB':>6s}")
+    print(hdr)
+    for r in recs:
+        row = _row(r)
+        if row["status"] != "ok":
+            print(f"{row['arch']:26s} {row['shape']:12s} {row['status'][:20]}")
+            continue
+        print(f"{row['arch']:26s} {row['shape']:12s} {'ok':6s} "
+              f"{row['t_c']:8.3f} {row['t_m']:8.3f} {row['t_x']:8.3f} "
+              f"{row['dom'][:6]:>6s} {row['useful']:7.3f} {row['frac']:6.3f} "
+              f"{row['gib']:6.1f}")
+        if csv_rows is not None:
+            csv_rows.append((f"roofline_{row['arch']}_{row['shape']}",
+                             max(row['t_c'], row['t_m'], row['t_x']) * 1e6,
+                             f"dom={row['dom']};frac={row['frac']:.3f}"))
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    recs = load_records(mesh)
+    lines = [
+        "| arch | shape | status | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| dominant | useful FLOPs | roofline frac | GiB/chip | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        row = _row(r)
+        if row["status"] != "ok":
+            lines.append(f"| {row['arch']} | {row['shape']} | {row['status']} "
+                         "| – | – | – | – | – | – | – | – |")
+            continue
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | ok | {row['t_c']:.3f} "
+            f"| {row['t_m']:.3f} | {row['t_x']:.3f} | {row['dom']} "
+            f"| {row['useful']:.3f} | {row['frac']:.3f} | {row['gib']:.1f} "
+            f"| {'yes' if row['fits'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    run(mesh="2x16x16")

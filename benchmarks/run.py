@@ -1,0 +1,34 @@
+"""Benchmark driver — one section per paper table + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-resnet", action="store_true",
+                    help="skip the (slow) Table IV ResNet benchmark")
+    ap.add_argument("--resnet-steps", type=int, default=120)
+    args = ap.parse_args()
+
+    csv_rows = []
+    from benchmarks import bench_kernels, roofline, table2_ppa, table3_image
+
+    table2_ppa.run(csv_rows)
+    table3_image.run(csv_rows)
+    bench_kernels.run(csv_rows)
+    roofline.run(csv_rows)
+    if not args.skip_resnet:
+        from benchmarks import table4_resnet
+
+        table4_resnet.run(csv_rows, train_steps=args.resnet_steps)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

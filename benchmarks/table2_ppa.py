@@ -1,0 +1,50 @@
+"""Table II reproduction: post-layout PPA via the calibrated analytical model.
+
+Prints predicted logic area / power / delay per multiplier configuration
+next to the paper's published values, with per-row deviation.  The model is
+calibrated on TWO rows only (Exact and AC5-5); every other row is a
+prediction (see repro/core/ppa.py).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import ppa
+
+
+def run(csv_rows=None):
+    print("\n== Table II: post-layout PPA (64x32 SRAM, analytical model) ==")
+    print(f"{'design':8s} {'area um2':>9s} {'paper':>7s} {'err%':>6s} "
+          f"{'power W':>9s} {'paper':>9s} {'err%':>6s} {'delay ns':>8s}")
+    errs_a, errs_p = [], []
+    for name, (kind, kw) in ppa.TABLE2_SPECS.items():
+        t0 = time.perf_counter()
+        est = ppa.estimate(kind, name=name, **kw)
+        dt = (time.perf_counter() - t0) * 1e6
+        pa, pp_ = ppa.PAPER_TABLE2_64x32[name]
+        ea = 100 * (est.logic_area_um2 - pa) / pa
+        ep = 100 * (est.power_w - pp_) / pp_
+        errs_a.append(abs(ea))
+        errs_p.append(abs(ep))
+        print(f"{name:8s} {est.logic_area_um2:9.0f} {pa:7.0f} {ea:6.1f} "
+              f"{est.power_w:9.2e} {pp_:9.2e} {ep:6.1f} {est.delay_ns:8.2f}")
+        if csv_rows is not None:
+            csv_rows.append((f"table2_{name}", dt,
+                             f"area={est.logic_area_um2:.0f};power={est.power_w:.3e}"))
+    print(f"mean |err|: area {sum(errs_a)/len(errs_a):.1f}%  "
+          f"power {sum(errs_p)/len(errs_p):.1f}%")
+    # headline claims
+    e = ppa.estimate("exact")
+    ac44 = ppa.estimate("ac", n=4)
+    acl5 = ppa.estimate("acl", n=5)
+    print(f"AC4-4 vs exact: area -{100*(1-ac44.logic_area_um2/e.logic_area_um2):.0f}% "
+          f"power -{100*(1-ac44.power_w/e.power_w):.0f}%  (paper headline: 69%/72%)")
+    print(f"ACL5  vs exact: area -{100*(1-acl5.logic_area_um2/e.logic_area_um2):.0f}% "
+          f"power -{100*(1-acl5.power_w/e.power_w):.0f}%  (paper: 78.4%/82.1%)")
+    da, dp = ppa.bd_omission_savings(5)
+    print(f"BD omission (n=5): area -{100*da:.1f}% power -{100*dp:.1f}% "
+          f"(paper: 6.8%/12.6%)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Inject the dry-run/roofline/perf tables into EXPERIMENTS.md markers."""
+import glob
+import json
+import os
+import re
+
+HERE = os.path.dirname(__file__)
+EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
+PERF = os.path.join(HERE, "artifacts", "perf")
+
+
+def dryrun_summary():
+    from benchmarks.roofline import load_records
+
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        recs = load_records(mesh)
+        ok = sum(1 for r in recs if r["status"] == "ok")
+        skip = sum(1 for r in recs if str(r["status"]).startswith("skipped"))
+        err = [r for r in recs
+               if r["status"] not in ("ok",) and not str(r["status"]).startswith("skipped")]
+        out.append(f"- mesh {mesh}: {ok} ok, {skip} skipped (long_500k "
+                   f"full-attention policy), {len(err)} failed"
+                   + (f" ({[ (e['arch'], e['shape']) for e in err ]})" if err else ""))
+    # memory fit summary
+    recs = load_records("16x16")
+    over = [(r["arch"], r["shape"],
+             round(r["memory"]["peak_estimate_bytes"] / 2**30, 1))
+            for r in recs if r["status"] == "ok"
+            and r["memory"]["peak_estimate_bytes"] > 16 * 2**30]
+    if over:
+        out.append(f"- cells over the 16 GiB v5e HBM budget at 16x16 "
+                   f"(see §Perf for the fixes): {over}")
+    return "\n".join(out)
+
+
+def perf_log():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(PERF, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        rf = r.get("roofline", {})
+        rows.append(
+            f"### {r['tag']}\n"
+            f"*{r.get('hypothesis', '')}*\n\n"
+            f"- status: {r['status']}; t_compute {rf.get('t_compute_s', 0):.2f}s, "
+            f"t_memory {rf.get('t_memory_s', 0):.2f}s, "
+            f"t_collective {rf.get('t_collective_s', 0):.2f}s "
+            f"-> dominant {rf.get('dominant')}, "
+            f"roofline fraction {rf.get('roofline_fraction', 0):.4f}, "
+            f"mem {r.get('memory', {}).get('peak_estimate_bytes', 0)/2**30:.1f} GiB\n")
+    return "\n".join(rows)
+
+
+def main():
+    from benchmarks.roofline import markdown_table
+
+    with open(EXP) as f:
+        text = f.read()
+    text = re.sub(
+        r"<!-- DRYRUN_TABLE -->.*?(?=\n## |$)",
+        "<!-- DRYRUN_TABLE -->\n" + dryrun_summary() + "\n\n"
+        "Full per-cell records: `benchmarks/artifacts/dryrun/*.json`; "
+        "regenerate tables with `python -m benchmarks.roofline`.\n",
+        text, flags=re.S)
+    table16 = markdown_table("16x16")
+    table512 = markdown_table("2x16x16")
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |$)",
+        "<!-- ROOFLINE_TABLE -->\n### Single-pod 16x16 (256 chips)\n\n"
+        + table16 + "\n\n### Multi-pod 2x16x16 (512 chips)\n\n" + table512 + "\n",
+        text, flags=re.S)
+    if "<!-- PERF_LOG -->" in text:
+        text = re.sub(r"<!-- PERF_LOG -->.*$",
+                      "<!-- PERF_LOG -->\n" + perf_log() + "\n", text, flags=re.S)
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Sharded checkpointing (msgpack+zstd), atomic commit, elastic re-sharding."""
+from . import io

@@ -1,0 +1,11 @@
+"""Architecture configs: the 10 assigned archs + the paper's ResNet workload.
+
+Importing this package registers every arch; use
+``repro.configs.base.get_arch(arch_id)`` / ``list_archs()``.
+"""
+from . import (base, deepseek_v3_671b, gemma2_9b, gemma3_12b,
+               llama4_maverick_400b_a17b, mamba2_130m, minitron_8b,
+               qwen2_vl_72b, qwen3_4b, whisper_tiny, zamba2_7b)
+from .base import ArchConfig, get_arch, list_archs
+
+__all__ = ["ArchConfig", "base", "get_arch", "list_archs"]

@@ -1,0 +1,25 @@
+"""llama4-maverick-400b-a17b [moe] — 128e top-1 + shared expert, early fusion
+[hf:meta-llama/Llama-4 family]."""
+from repro.configs.base import ArchConfig, LayerSpec, MoEConfig, register_arch
+
+CONFIG = register_arch(ArchConfig(
+    arch_id="llama4-maverick-400b-a17b",
+    family="moe",
+    d_model=5120,
+    n_heads=40,          # not divisible by model=16 -> heads replicate; fsdp
+    n_kv_heads=8,        # covers the attention weights instead (DESIGN.md §5)
+    head_dim=128,
+    d_ff=8192,
+    dense_d_ff=16384,     # the interleaved dense layers
+    vocab=202048,
+    # MoE every 2nd layer (interleave step 2) — this is what makes the model
+    # 400B total / 17B active; 48 layers = 24 x (moe, dense)
+    segments=((24, (LayerSpec(kind="moe", attn="global"),
+                    LayerSpec(kind="dense", attn="global"))),),
+    moe=MoEConfig(n_experts=128, top_k=1, n_shared=1, capacity_factor=1.25),
+    rope_theta=500000.0,
+    fsdp=True,
+    optimizer="adafactor",
+    param_dtype="bfloat16",
+    grad_accum=8,
+))

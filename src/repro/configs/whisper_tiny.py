@@ -1,0 +1,19 @@
+"""whisper-tiny [audio] — enc-dec transformer backbone; the conv/mel frontend
+is a STUB (input_specs feeds precomputed frame embeddings) [arXiv:2212.04356]."""
+from repro.configs.base import ArchConfig, LayerSpec, register_arch
+
+CONFIG = register_arch(ArchConfig(
+    arch_id="whisper-tiny",
+    family="audio",
+    d_model=384,
+    n_heads=6,           # 6 heads -> replicated under model=16 (divisibility rule)
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab=51865,
+    segments=((4, (LayerSpec(kind="dense", attn="global"),)),),  # decoder
+    encoder_layers=4,
+    decoder_len=256,
+    frontend="audio_stub",
+    seq_shard_activations=False,   # tiny model; collective overhead dominates
+))

@@ -1,0 +1,36 @@
+"""Core paper contribution: accuracy-configurable FP multiplication for CiM.
+
+Public surface:
+  formats      — FloatFormat descriptions + bit-level helpers
+  exact_mult   — IEEE 754 exact multiplier (oracle + device)
+  afpm         — mantissa-segmentation AFPM (AC-n-n) + ACL low-precision mode
+  baselines    — MMBS / CSS / NC-LPC-HPC comparison designs
+  registry     — named multiplier library (the OpenACM operator library role)
+  numerics     — NumericsConfig + nmatmul dispatch (compiler integration)
+  metrics      — MRED / NMED / PSNR / top-k
+  ppa          — analytical gate-equivalent PPA model (Table II stand-in)
+"""
+from . import afpm, baselines, exact_mult, formats, metrics, numerics, ppa, registry
+from .afpm import AFPMConfig, afpm_matmul_emulated, afpm_mult_f32
+from .numerics import EXACT, NumericsConfig, nmatmul, segmented_matmul_xla
+from .registry import available, get_multiplier
+
+__all__ = [
+    "AFPMConfig",
+    "EXACT",
+    "NumericsConfig",
+    "afpm",
+    "afpm_matmul_emulated",
+    "afpm_mult_f32",
+    "available",
+    "baselines",
+    "exact_mult",
+    "formats",
+    "get_multiplier",
+    "metrics",
+    "nmatmul",
+    "numerics",
+    "ppa",
+    "registry",
+    "segmented_matmul_xla",
+]

@@ -1,0 +1,261 @@
+"""Mantissa-segmentation approximate floating-point multiplier (paper §III-B).
+
+Implements the paper's AC-n-n design bit-faithfully, vectorized in JAX
+(uint32 arithmetic only, so it runs identically on CPU and on the TPU VPU):
+
+* the explicit mantissa is segmented into a high part ``A`` (top ``n``
+  bits) and a low part ``B`` (next ``n`` bits); lower bits are truncated
+  (Eq. 5);
+* partial products: ``AC`` always exact; ``AD``/``BC`` conditionally
+  executed — bypassed when the low-segment operand (``D`` resp. ``B``)
+  has its upper ``n-2`` bits all zero, with a shift-based compensation
+  ``A<<1`` / ``C<<1`` when the bypassed operand is non-zero;
+* special cases: ``A==0 & B,C!=0`` forces ``BC``; ``C==0 & A,D!=0``
+  forces ``AD``;
+* the ``BD`` partial product is always omitted (Eq. 6);
+* shift-and-add accumulation into a ``3n``-fractional-bit accumulator;
+  the linear terms ``1 + Mx + My`` use the mantissas truncated to their
+  upper ``3n`` bits (Fig. 3);
+* normalization decided by the two integer bits of the accumulator
+  (product in ``[1, 4)``), mantissa zero-padded back to the format width.
+
+The ``ACL-n`` low-precision mode replaces the whole mantissa-product term
+with the paper's bitwise-AND first-order approximation: the partial sum is
+``A_x + A_y + (A_x & A_y)`` at weight ``2^-n`` with an ``n``-bit
+accumulator (§III-B last paragraph).
+
+Approximate modes flush subnormal inputs/outputs to zero (underflow is
+"typically set to ±0" in the paper) and propagate inf/nan IEEE-style.
+
+Everything here is elementwise and differentiable-opt-out (a
+straight-through ``custom_jvp`` is provided so the emulated numerics can
+sit inside a training graph for finetuning studies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FP32, FloatFormat, get_format
+
+_U1 = jnp.uint32(1)
+
+
+def _decode(x, fmt: FloatFormat):
+    """float32 -> (sign, biased exp field, mantissa field aligned to fmt.man_bits)."""
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+    man32 = bits & jnp.uint32((1 << 23) - 1)
+    exp32 = (bits >> 23) & jnp.uint32(0xFF)
+    sign = bits >> 31
+    if fmt.man_bits == 23 and fmt.exp_bits == 8:
+        return sign, exp32, man32
+    # operate in the narrower storage format: truncate mantissa, rebias exp
+    man = man32 >> (23 - fmt.man_bits)
+    e_unb = exp32.astype(jnp.int32) - 127
+    exp = jnp.clip(e_unb + fmt.bias, 0, fmt.max_exp_field).astype(jnp.uint32)
+    # flush values outside fmt's normal range (approx path flushes subnormals)
+    man = jnp.where((exp == 0) | (exp == fmt.max_exp_field), jnp.uint32(0), man)
+    # preserve inf/nan class from fp32
+    exp = jnp.where(exp32 == 255, jnp.uint32(fmt.max_exp_field), exp)
+    man = jnp.where((exp32 == 255) & (man32 != 0), _U1, man)
+    return sign, exp, man
+
+
+def _encode_f32(sign, e_unb, man_fmt, fmt: FloatFormat):
+    """(sign, unbiased exp, fmt-width mantissa) -> float32 value."""
+    man32 = jnp.asarray(man_fmt, jnp.uint32) << (23 - fmt.man_bits)
+    exp32 = jnp.asarray(e_unb + 127, jnp.uint32)
+    bits = (jnp.asarray(sign, jnp.uint32) << 31) | (exp32 << 23) | man32
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AFPMConfig:
+    """Configuration knob exposed to the compiler flow (paper §III-B)."""
+
+    n: int = 5                 # segment width
+    mode: str = "ac"           # "ac" (AC-n-n) or "acl" (low-precision mode)
+    fmt: str = "fp32"          # storage format name (fp32/bf16/fp16/afp24/...)
+    skip_bd: bool = True       # paper: BD always omitted (kept as a knob for ablation)
+    conditional: bool = True   # conditional execution of AD/BC
+    compensation: bool = True  # shift-based compensation of bypassed terms
+
+    @property
+    def label(self) -> str:
+        if self.mode == "acl":
+            return f"ACL{self.n}"
+        return f"AC{self.n}-{self.n}"
+
+    def format(self) -> FloatFormat:
+        return get_format(self.fmt)
+
+
+def _ac_mantissa_product(mx, my, n: int, M: int, cfg: AFPMConfig):
+    """Approximate cross term ``Mx*My`` in units of ``2^-3n`` (uint32).
+
+    ``mx``/``my`` are the explicit mantissa fields (width ``M``).
+    Returns an integer ``cross`` such that ``Mx*My ~= cross * 2^-3n``.
+    """
+    # segments (Eq. 5): A/C = top n bits, B/D = next n bits
+    A = (mx >> (M - n)).astype(jnp.uint32)
+    B = ((mx >> max(M - 2 * n, 0)) & jnp.uint32((1 << n) - 1)).astype(jnp.uint32)
+    C = (my >> (M - n)).astype(jnp.uint32)
+    D = ((my >> max(M - 2 * n, 0)) & jnp.uint32((1 << n) - 1)).astype(jnp.uint32)
+
+    AC = A * C
+    AD = A * D
+    BC = B * C
+    BD = B * D
+
+    if cfg.conditional:
+        # bypass when the upper (n-2) bits of the low operand are all zero
+        d_small = (D >> 2) == 0
+        b_small = (B >> 2) == 0
+        # special-case forcing (paper): A==0 & B,C!=0 -> force BC;
+        #                               C==0 & A,D!=0 -> force AD
+        force_ad = (C == 0) & (A != 0) & (D != 0)
+        force_bc = (A == 0) & (C != 0) & (B != 0)
+        exec_ad = (~d_small) | force_ad
+        exec_bc = (~b_small) | force_bc
+        if cfg.compensation:
+            # bypassed multiply ~ operand approximated by the constant 2 -> A<<1
+            comp_ad = jnp.where((A != 0) & (D != 0), A << 1, jnp.uint32(0))
+            comp_bc = jnp.where((C != 0) & (B != 0), C << 1, jnp.uint32(0))
+        else:
+            comp_ad = jnp.uint32(0)
+            comp_bc = jnp.uint32(0)
+        ad_term = jnp.where(exec_ad, AD, comp_ad)
+        bc_term = jnp.where(exec_bc, BC, comp_bc)
+    else:
+        ad_term, bc_term = AD, BC
+
+    cross = (AC << n) + ad_term + bc_term
+    if not cfg.skip_bd:
+        cross = cross + (BD >> n)  # BD sits n bits below the accumulator lsb
+    return cross
+
+
+def afpm_mult_f32(x, y, cfg: AFPMConfig):
+    """Elementwise approximate multiply, bit-faithful to the paper's datapath.
+
+    Operates on float32 carriers; if ``cfg.fmt`` is narrower the operands
+    are first truncated into that storage format (the CiM array stores
+    them at that width).
+    """
+    fmt = cfg.format()
+    n, M = cfg.n, fmt.man_bits
+    if cfg.mode not in ("ac", "acl"):
+        raise ValueError(f"unknown AFPM mode {cfg.mode!r}")
+    if cfg.mode == "ac" and M < 2 * n:
+        raise ValueError(f"mantissa of {fmt.name} too narrow for 2 segments of n={n}")
+    if cfg.mode == "acl" and M < n:
+        raise ValueError(f"mantissa of {fmt.name} too narrow for n={n}")
+
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    sx, ex, mx = _decode(x, fmt)
+    sy, ey, my = _decode(y, fmt)
+    s_res = sx ^ sy
+
+    if cfg.mode == "ac":
+        T = min(3 * n, M)  # accumulator fractional width (3n, clipped to mantissa)
+        U = jnp.uint32(1 << T)
+        cross = _ac_mantissa_product(mx, my, n, M, cfg)
+        cross_t = cross >> (3 * n - T) if 3 * n > T else cross << (T - 3 * n)
+        # linear terms use mantissas truncated to their upper 3n bits (Fig. 3)
+        mx_t = (mx >> (M - T)).astype(jnp.uint32)
+        my_t = (my >> (M - T)).astype(jnp.uint32)
+        acc = U + mx_t + my_t + cross_t  # (1 + Mx)(1 + My) approx, in 2^-T units
+    else:  # ACL-n: partial sum = A_x + A_y + (A_x & A_y), n-bit accumulator
+        T = n
+        U = jnp.uint32(1 << T)
+        A = (mx >> (M - n)).astype(jnp.uint32)
+        Cseg = (my >> (M - n)).astype(jnp.uint32)
+        acc = U + A + Cseg + (A & Cseg)
+
+    # normalization from the two integer bits of the accumulator (prod in [1,4))
+    ge2 = acc >= (U << 1)
+    acc_n = jnp.where(ge2, acc >> 1, acc)  # in [U, 2U)
+    man_acc = acc_n - U  # T fractional bits
+    # zero-padded back to the format mantissa width (T <= M always here)
+    man_res = (man_acc << (M - T)).astype(jnp.uint32)
+
+    e_unb = (
+        ex.astype(jnp.int32)
+        - fmt.bias
+        + ey.astype(jnp.int32)
+        - fmt.bias
+        + ge2.astype(jnp.int32)
+    )
+
+    res = _encode_f32(s_res, e_unb, man_res, fmt)
+
+    # exception handling (overflow -> inf, underflow -> 0; paper §III-A rules)
+    e_min = 1 - fmt.bias
+    e_max = fmt.max_exp_field - 1 - fmt.bias
+    sgn = jnp.where(s_res == 1, -1.0, 1.0).astype(jnp.float32)
+    res = jnp.where(e_unb > e_max, sgn * jnp.inf, res)
+    res = jnp.where(e_unb < e_min, sgn * 0.0, res)
+
+    # special operands: zero/subnormal-flush, inf, nan
+    x_fin = jnp.isfinite(x)
+    y_fin = jnp.isfinite(y)
+    x_zero = (ex == 0)  # true zero or flushed subnormal
+    y_zero = (ey == 0)
+    res = jnp.where((x_zero | y_zero) & x_fin & y_fin, sgn * 0.0, res)
+    inf_in = jnp.isinf(x) | jnp.isinf(y)
+    res = jnp.where(inf_in, sgn * jnp.inf, res)
+    res = jnp.where(
+        jnp.isnan(x) | jnp.isnan(y) | (inf_in & (x_zero | y_zero)), jnp.nan, res
+    )
+    return res
+
+
+# -- straight-through estimator wrapper (lets emulated numerics live in -----
+# -- a training graph: forward = AFPM, backward = exact product rule) -------
+
+@partial(jax.custom_jvp, nondiff_argnums=(2,))
+def afpm_mult_ste(x, y, cfg: AFPMConfig):
+    return afpm_mult_f32(x, y, cfg)
+
+
+@afpm_mult_ste.defjvp
+def _afpm_mult_jvp(cfg, primals, tangents):
+    x, y = primals
+    dx, dy = tangents
+    return afpm_mult_f32(x, y, cfg), x * dy + y * dx
+
+
+def afpm_matmul_emulated(x, w, cfg: AFPMConfig, k_chunk: int = 64):
+    """Matmul where every scalar product goes through the bit-level AFPM.
+
+    Memory-bounded by chunking the contraction axis: per chunk the
+    elementwise products ``x[..., k] * w[k, :]`` are materialized as a
+    ``(..., k_chunk, N)`` block and summed in fp32.  This is the
+    paper-faithful semantics for Tables III/IV (accumulation in the CiM
+    macro is exact; only the multipliers are approximate).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    K = x.shape[-1]
+    assert w.shape[0] == K, (x.shape, w.shape)
+    pad = (-K) % k_chunk
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        w = jnp.pad(w, [(0, pad), (0, 0)])
+    nchunks = (K + pad) // k_chunk
+    xs = x.reshape(x.shape[:-1] + (nchunks, k_chunk))
+    ws = w.reshape(nchunks, k_chunk, w.shape[-1])
+
+    def body(carry, kc):
+        xk, wk = kc  # (..., k_chunk), (k_chunk, N)
+        prods = afpm_mult_ste(xk[..., :, None], wk, cfg)
+        return carry + jnp.sum(prods, axis=-2), None
+
+    init = jnp.zeros(x.shape[:-1] + (w.shape[-1],), jnp.float32)
+    xs_m = jnp.moveaxis(xs, -2, 0)  # (nchunks, ..., k_chunk)
+    out, _ = jax.lax.scan(body, init, (xs_m, ws))
+    return out

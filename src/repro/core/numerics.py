@@ -1,0 +1,134 @@
+"""Numerics configuration + matmul dispatch — the "compiler integration" layer.
+
+This is the system-level face of the paper: floating-point precision and
+multiplier architecture are exposed as first-class configuration, and every
+matmul in the model zoo routes through :func:`nmatmul`.
+
+Modes
+-----
+``exact``
+    Native IEEE fp32 (or bf16) matmul — the exact-baseline row.
+``emulated``
+    Every scalar product goes through the bit-level multiplier selected by
+    ``multiplier`` (AC-n-n / ACL-n / MMBS / CSS / NC-LPC-HPC).  Bit-faithful
+    to the RTL; used for the paper's accuracy studies (Tables III/IV).
+    O(M*N*K) elementwise work — small models only.
+``segmented``
+    TPU-native analogue: split-float (hi/lo bf16) matmul with term
+    skipping; ``seg_passes`` = 1 (ACL-like), 2, or 3 (AC-n-n-like) MXU
+    passes, exact = 6-pass HIGHEST.  Scales to the full model zoo and is
+    what the multi-pod dry-run/roofline paths use.  Backed by the Pallas
+    kernel in ``repro.kernels`` with an XLA fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .afpm import AFPMConfig, afpm_matmul_emulated
+from .registry import get_multiplier
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsConfig:
+    mode: str = "exact"             # exact | emulated | segmented
+    multiplier: str = "AC5-5"       # registry name, for emulated mode
+    seg_passes: int = 3             # segmented mode: 1=ACL-like, 3=AC-like
+    seg_n: int = 5                  # segment width for emulated AC modes
+    use_pallas: bool = True         # segmented mode: Pallas kernel vs XLA fallback
+    compute_dtype: str = "bfloat16" # exact-mode matmul dtype for big models
+    accum_dtype: str = "float32"
+
+    def afpm(self) -> AFPMConfig:
+        mode = "acl" if self.multiplier.lower().startswith("acl") else "ac"
+        return AFPMConfig(n=self.seg_n, mode=mode)
+
+
+EXACT = NumericsConfig(mode="exact")
+
+
+def _split_hi_lo(x: jax.Array):
+    """fp32 -> (hi, lo) bf16 pair: the MXU image of mantissa segmentation.
+
+    hi carries the top 8 significand bits (hidden + 7 = the "A" segment),
+    lo = bf16(x - hi) carries the next ~8 ("B" segment).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    hi = x.astype(jnp.bfloat16)
+    lo = (x - hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    return hi, lo
+
+
+def segmented_matmul_xla(x, w, passes: int = 3):
+    """Split-float approximate matmul (XLA fallback; oracle for the kernel).
+
+    passes=3: hi*hi + hi*lo + lo*hi  (AC + AD + BC; BD omitted, paper Eq. 6)
+    passes=2: hi*hi + hi*lo          (asymmetric: activations low bits kept)
+    passes=1: hi*hi                  (ACL-like single high-segment product)
+    """
+    xh, xl = _split_hi_lo(x)
+    wh, wl = _split_hi_lo(w)
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out = dot(xh, wh)
+    if passes >= 2:
+        out = out + dot(xl, wh)
+    if passes >= 3:
+        out = out + dot(xh, wl)
+    return out
+
+
+def nmatmul(x: jax.Array, w: jax.Array, cfg: Optional[NumericsConfig] = None):
+    """Numerics-aware matmul: ``x @ w`` under the configured multiplier."""
+    cfg = cfg or EXACT
+    if cfg.mode == "exact":
+        dt = jnp.dtype(cfg.compute_dtype)
+        return jax.lax.dot_general(
+            x.astype(dt), w.astype(dt), (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.dtype(cfg.accum_dtype),
+        )
+    if cfg.mode == "emulated":
+        name = cfg.multiplier.lower()
+        if name.startswith(("ac", "acl")) and not name.startswith("ac-"):
+            return afpm_matmul_emulated(x, w, cfg.afpm())
+        # generic registry multiplier: chunked elementwise matmul
+        mult = get_multiplier(cfg.multiplier)
+        return _generic_emulated_matmul(x, w, mult)
+    if cfg.mode == "segmented":
+        if cfg.use_pallas:
+            from repro.kernels import ops  # lazy: kernels import core
+
+            return ops.afpm_matmul(x, w, passes=cfg.seg_passes)
+        return segmented_matmul_xla(x, w, cfg.seg_passes)
+    raise ValueError(f"unknown numerics mode {cfg.mode!r}")
+
+
+def _generic_emulated_matmul(x, w, mult, k_chunk: int = 64):
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    K = x.shape[-1]
+    pad = (-K) % k_chunk
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        w = jnp.pad(w, [(0, pad), (0, 0)])
+    nchunks = x.shape[-1] // k_chunk
+    xs = jnp.moveaxis(x.reshape(x.shape[:-1] + (nchunks, k_chunk)), -2, 0)
+    ws = w.reshape(nchunks, k_chunk, w.shape[-1])
+
+    def body(carry, kc):
+        xk, wk = kc
+        return carry + jnp.sum(mult(xk[..., :, None], wk), axis=-2), None
+
+    init = jnp.zeros(x.shape[:-1] + (w.shape[-1],), jnp.float32)
+    out, _ = jax.lax.scan(body, init, (xs, ws))
+    return out
+
+
+def apply_elementwise(x, y, multiplier: str):
+    """Elementwise product under a named multiplier (image-processing path)."""
+    return get_multiplier(multiplier)(x, y)

@@ -1,0 +1,223 @@
+"""Analytical PPA (power/performance/area) model for the multiplier designs.
+
+The paper's Table II is post-layout (OpenROAD + FreePDK45).  This container
+has no EDA flow, so we replace layout with a gate-equivalent (GE) cost
+model of each datapath — partial-product arrays, compressor trees, adders,
+zero-detectors, steering muxes — and calibrate two scalar constants per
+metric (slope and intercept of ``metric = a*GE + b``) on two anchor rows
+of the published table (the exact FP32 multiplier and AC5-5, 64x32 SRAM
+block).  The benchmark (`benchmarks/table2_ppa.py`) then *predicts* every
+other row and reports the deviation from the paper, making the model
+falsifiable.  Area uses the full datapath GE; power uses the *active* GE
+(runtime-reconfigurable designs clock-gate the unused portion of their
+arrays, which is why e.g. MMBS has large area but moderate power).
+
+GE unit convention (standard-cell folklore, NAND2 = 1 GE):
+  AND2 1.5 | XOR2 2.5 | full adder 4.5 | half adder 2.5 | 2:1 mux 2.5 |
+  register bit 6.0 | OR-tree per input 1.0
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GE_AND = 1.5
+GE_XOR = 2.5
+GE_FA = 4.5
+GE_HA = 2.5
+GE_MUX = 2.5
+GE_REG = 6.0
+GE_OR = 1.0
+
+# paper constants (Table II): SRAM area and flat (SRAM-dominated) delay
+SRAM_AREA = {"16x8": 7052.0, "32x16": 16910.0, "64x32": 48642.0}
+SRAM_DELAY_NS = {"16x8": 5.22, "32x16": 5.24, "64x32": 5.24}
+
+
+def _array_mult_ge(n: int, m: int) -> float:
+    """n x m unsigned array multiplier: AND plane + Wallace compressors + CPA."""
+    if n <= 0 or m <= 0:
+        return 0.0
+    if n == 1 or m == 1:
+        return n * m * GE_AND
+    and_plane = n * m * GE_AND
+    compressors = max(n * m - n - m, 0) * GE_FA  # classic n*m-n-m FA count
+    cpa = (n + m) * GE_FA  # final carry-propagate adder
+    return and_plane + compressors + cpa
+
+
+def _adder_ge(width: int) -> float:
+    return width * GE_FA
+
+
+def _zero_detect_ge(width: int) -> float:
+    return max(width, 0) * GE_OR
+
+
+@dataclasses.dataclass(frozen=True)
+class PPAEstimate:
+    name: str
+    ge_area: float
+    ge_power: float
+    logic_area_um2: float
+    power_w: float
+    delay_ns: float
+    sram_area_um2: float
+
+    @property
+    def total_area_um2(self) -> float:
+        return self.logic_area_um2 + self.sram_area_um2
+
+
+def multiplier_ge(kind: str, **kw) -> tuple[float, float]:
+    """(area GE, active/power GE) of one FP multiplier datapath."""
+    man = kw.get("man_bits", 23)
+    exp = kw.get("exp_bits", 8)
+    sig = man + 1
+    # shared FP front/back-end: sign xor, exponent adders, special detect,
+    # overflow/underflow logic
+    shared = GE_XOR + 2 * _adder_ge(exp + 1) + 2 * _zero_detect_ge(exp + man) + 8 * GE_MUX
+
+    if kind == "exact":
+        core = _array_mult_ge(sig, sig)
+        core += _adder_ge(2 * sig)  # rounding (RNE) increment + renorm
+        core += _adder_ge(sig)      # sticky/guard collection
+        active = core
+    elif kind == "ac":
+        n = kw["n"]
+        # AC always; AD/BC arrays present but conditionally fired;
+        # BD array REMOVED (paper: ~6.8% area, ~12.6% power saved)
+        core = 3 * _array_mult_ge(n, n)
+        core += 2 * _zero_detect_ge(n - 2)      # conditional-execution detectors
+        core += 2 * (n * GE_MUX)                # comp/bypass steering
+        core += _adder_ge(3 * n + 2) * 3        # shift-and-add accumulator (3n)
+        core += (3 * n) * GE_MUX                # normalization shifter (1 pos)
+        active = core
+    elif kind == "acl":
+        n = kw["n"]
+        core = n * GE_AND                       # bitwise AND row
+        core += 2 * _adder_ge(n + 2)            # two n-bit additions
+        core += n * GE_MUX
+        active = core
+    elif kind == "mmbs":
+        k = kw["k"]
+        kmax = kw.get("k_max", 12)              # runtime-reconfigurable datapath
+        T = 2 * k + 2
+        core = _array_mult_ge(kmax, kmax)       # array sized for max precision
+        core += 3 * _adder_ge(T)                # linear-term shift-and-add
+        core += T * GE_MUX
+        core += 24 * GE_REG                     # precision/frequency config regs
+        # only the k x k portion of the array switches at precision k
+        active = core - (_array_mult_ge(kmax, kmax) - _array_mult_ge(k, k))
+    elif kind == "css":
+        s = kw["m"] // 2 + 2                    # matches baselines.css_mult_f32
+        core = _array_mult_ge(s, s)
+        core += 2 * _adder_ge(2 * s + 2)        # MAC restructuring adders
+        core += 2 * 24 * GE_MUX                 # static segment steering (24b in)
+        core += 2 * _zero_detect_ge(24)         # segment-select detection
+        active = core
+    elif kind == "log":
+        comp = kw.get("comp", "nc")
+        core = _adder_ge(man + 1)               # Mitchell mantissa add
+        if comp == "lpc":
+            core += _adder_ge(man) * 0.5 + 4 * GE_MUX
+        elif comp == "hpc":
+            core += _array_mult_ge(4, 4) + _adder_ge(man)
+        active = core
+    else:
+        raise ValueError(kind)
+    return shared + core, shared + active
+
+
+# Calibration anchors (paper Table II, 64x32 rows): exact and AC5-5
+_ANCHOR_EXACT = {"area": 6268.0, "power": 2.32e-3}
+_ANCHOR_AC55 = {"area": 2156.0, "power": 7.72e-4}
+
+
+def _calibration():
+    ge_exact, gp_exact = multiplier_ge("exact")
+    ge_ac55, gp_ac55 = multiplier_ge("ac", n=5)
+    a_area = (_ANCHOR_EXACT["area"] - _ANCHOR_AC55["area"]) / (ge_exact - ge_ac55)
+    b_area = _ANCHOR_EXACT["area"] - a_area * ge_exact
+    a_pow = (_ANCHOR_EXACT["power"] - _ANCHOR_AC55["power"]) / (gp_exact - gp_ac55)
+    b_pow = _ANCHOR_EXACT["power"] - a_pow * gp_exact
+    return a_area, b_area, a_pow, b_pow
+
+
+def estimate(kind: str, name: str | None = None, sram: str = "64x32", **kw) -> PPAEstimate:
+    a_area, b_area, a_pow, b_pow = _calibration()
+    ge_area, ge_power = multiplier_ge(kind, **kw)
+    return PPAEstimate(
+        name=name or kind,
+        ge_area=ge_area,
+        ge_power=ge_power,
+        logic_area_um2=a_area * ge_area + b_area,
+        power_w=a_pow * ge_power + b_pow,
+        delay_ns=SRAM_DELAY_NS[sram],  # SRAM access dominates the critical path
+        sram_area_um2=SRAM_AREA[sram],
+    )
+
+
+# Published Table II (64x32) for validation in the benchmark.
+PAPER_TABLE2_64x32 = {
+    "Exact": (6268.0, 2.32e-3),
+    "ACL5": (1351.0, 4.16e-4),
+    "AC4-4": (1945.0, 6.42e-4),
+    "AC5-5": (2156.0, 7.72e-4),
+    "AC6-6": (2568.0, 9.22e-4),
+    "MMBS5": (3134.0, 7.07e-4),
+    "MMBS6": (3171.0, 7.56e-4),
+    "MMBS7": (3329.0, 8.61e-4),
+    "CSS12": (2136.0, 6.42e-4),
+    "CSS14": (2312.0, 7.18e-4),
+    "CSS16": (2572.0, 8.01e-4),
+    "CSS18": (2846.0, 9.12e-4),
+    "NC": (1360.0, 4.22e-4),
+    "LPC": (1384.0, 4.33e-4),
+    "HPC": (1658.0, 5.19e-4),
+}
+
+# Specs for every Table II row: name -> (kind, kwargs)
+TABLE2_SPECS = {
+    "Exact": ("exact", {}),
+    "ACL5": ("acl", {"n": 5}),
+    "AC4-4": ("ac", {"n": 4}),
+    "AC5-5": ("ac", {"n": 5}),
+    "AC6-6": ("ac", {"n": 6}),
+    "MMBS5": ("mmbs", {"k": 5}),
+    "MMBS6": ("mmbs", {"k": 6}),
+    "MMBS7": ("mmbs", {"k": 7}),
+    "CSS12": ("css", {"m": 12}),
+    "CSS14": ("css", {"m": 14}),
+    "CSS16": ("css", {"m": 16}),
+    "CSS18": ("css", {"m": 18}),
+    "NC": ("log", {"comp": "nc"}),
+    "LPC": ("log", {"comp": "lpc"}),
+    "HPC": ("log", {"comp": "hpc"}),
+}
+
+# Paper headline claims (abstract / §IV-A) used as validation targets.
+PAPER_CLAIMS = {
+    "headline_area_reduction": 0.69,   # "up to 69% logic area reduction"
+    "headline_power_reduction": 0.72,  # "72% power savings"
+    "acl5_area_reduction": 0.784,      # ACL5 vs exact
+    "acl5_power_reduction": 0.821,
+    "bd_omission_area": 0.068,         # omitting BD: ~6.8% area
+    "bd_omission_power": 0.126,        # ~12.6% power
+}
+
+
+def bd_omission_savings(n: int = 5) -> tuple[float, float]:
+    """Area/power saved by omitting the BD array (validates the 6.8%/12.6% claim)."""
+    a_area, b_area, a_pow, b_pow = _calibration()
+    ge_a, gp_a = multiplier_ge("ac", n=n)
+    # with BD: a 4th n x n array + wider (4n) accumulator
+    ge_bd = ge_a + _array_mult_ge(n, n) + (_adder_ge(4 * n) - _adder_ge(3 * n + 2)) * 3
+    gp_bd = ge_bd
+    area_with = a_area * ge_bd + b_area
+    area_without = a_area * ge_a + b_area
+    pow_with = a_pow * gp_bd + b_pow
+    pow_without = a_pow * gp_a + b_pow
+    return (
+        (area_with - area_without) / area_with,
+        (pow_with - pow_without) / pow_with,
+    )

@@ -1,0 +1,62 @@
+"""Multiplier registry — the "operator library" of the compiler flow.
+
+OpenACM exposes approximate operators as named library entries that the
+compiler instantiates per layer.  We mirror that: every multiplier design
+(exact, AC-n-n, ACL-n, MMBS-k, CSS-m, NC/LPC/HPC) is registered under the
+paper's label and resolvable by name from model/benchmark configs.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+
+from . import afpm, baselines
+from .exact_mult import exact_mult_f32
+
+MultFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+_REGISTRY: Dict[str, MultFn] = {}
+
+
+def register(name: str, fn: MultFn) -> None:
+    _REGISTRY[name.lower()] = fn
+
+
+def get_multiplier(name: str) -> MultFn:
+    try:
+        return _REGISTRY[name.lower()]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown multiplier {name!r}; available: {sorted(_REGISTRY)}"
+        ) from e
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def _register_defaults() -> None:
+    register("exact", exact_mult_f32)
+    for n in (3, 4, 5, 6, 7):
+        cfg = afpm.AFPMConfig(n=n, mode="ac")
+        register(f"AC{n}-{n}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c))
+    for n in (4, 5, 6, 8):
+        cfg = afpm.AFPMConfig(n=n, mode="acl")
+        register(f"ACL{n}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c))
+    # narrower storage formats (paper: FP16..FP32 supported by the framework)
+    for fmtname, nmax in (("fp16", 5), ("afp24", 7), ("bf16", 3)):
+        cfg = afpm.AFPMConfig(n=min(nmax, 5), mode="ac", fmt=fmtname)
+        register(f"AC-{fmtname}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c))
+    for k in (5, 6, 7):
+        cfg = baselines.MMBSConfig(k=k)
+        register(f"MMBS{k}", lambda x, y, c=cfg: baselines.mmbs_mult_f32(x, y, c))
+    for m in (12, 14, 16, 18):
+        cfg = baselines.CSSConfig(m=m)
+        register(f"CSS{m}", lambda x, y, c=cfg: baselines.css_mult_f32(x, y, c))
+    for comp in ("nc", "lpc", "hpc"):
+        cfg = baselines.LogConfig(comp=comp)
+        register(comp.upper(), lambda x, y, c=cfg: baselines.log_mult_f32(x, y, c))
+
+
+_register_defaults()

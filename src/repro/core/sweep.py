@@ -1,0 +1,72 @@
+"""Design-space exploration: the OpenACM-style accuracy-PPA sweep.
+
+The paper's point is that the compiler can explore (multiplier, n, format)
+configurations systematically.  This module produces the Pareto frontier
+over the registered designs — error (MRED on a caller-supplied operand
+distribution) vs area/power from the analytical model — and can recommend
+a configuration for an error budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ppa
+from .metrics import mred
+from .registry import get_multiplier
+
+SWEEPABLE = {
+    # name -> (ppa kind, ppa kwargs)
+    "AC3-3": ("ac", {"n": 3}), "AC4-4": ("ac", {"n": 4}),
+    "AC5-5": ("ac", {"n": 5}), "AC6-6": ("ac", {"n": 6}),
+    "AC7-7": ("ac", {"n": 7}),
+    "ACL4": ("acl", {"n": 4}), "ACL5": ("acl", {"n": 5}),
+    "ACL6": ("acl", {"n": 6}),
+    "MMBS5": ("mmbs", {"k": 5}), "MMBS6": ("mmbs", {"k": 6}),
+    "MMBS7": ("mmbs", {"k": 7}),
+    "CSS12": ("css", {"m": 12}), "CSS14": ("css", {"m": 14}),
+    "CSS16": ("css", {"m": 16}), "CSS18": ("css", {"m": 18}),
+    "NC": ("log", {"comp": "nc"}), "LPC": ("log", {"comp": "lpc"}),
+    "HPC": ("log", {"comp": "hpc"}),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    name: str
+    mred: float
+    area_um2: float
+    power_w: float
+    pareto: bool = False
+
+
+def sweep(x=None, y=None, seed: int = 0, n_samples: int = 50_000):
+    """Evaluate every design; returns SweepPoints with Pareto flags."""
+    if x is None:
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(-4, 4, n_samples).astype(np.float32)
+        y = rng.uniform(-4, 4, n_samples).astype(np.float32)
+    exact = np.asarray(x, np.float64) * np.asarray(y, np.float64)
+    points = []
+    for name, (kind, kw) in SWEEPABLE.items():
+        approx = np.asarray(get_multiplier(name)(jnp.asarray(x), jnp.asarray(y)))
+        est = ppa.estimate(kind, name=name, **kw)
+        points.append(SweepPoint(name, mred(approx, exact),
+                                 est.logic_area_um2, est.power_w))
+    # Pareto: no other point has both lower error and lower area
+    out = []
+    for p in points:
+        dominated = any(q.mred <= p.mred and q.area_um2 < p.area_um2
+                        for q in points if q is not p)
+        out.append(dataclasses.replace(p, pareto=not dominated))
+    return sorted(out, key=lambda p: p.mred)
+
+
+def recommend(error_budget: float, metric: str = "area_um2", **kw) -> SweepPoint:
+    """Cheapest design meeting the MRED budget (the compiler's selection)."""
+    candidates = [p for p in sweep(**kw) if p.mred <= error_budget]
+    if not candidates:
+        raise ValueError(f"no design meets MRED <= {error_budget}")
+    return min(candidates, key=lambda p: getattr(p, metric))

@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipelines (host-shardable, restart-exact)."""
+from . import pipeline, synthetic
+from .synthetic import DataConfig

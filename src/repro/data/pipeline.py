@@ -1,0 +1,72 @@
+"""Host data pipeline: per-shard iterators with prefetch + device put.
+
+On a real multi-host pod each process feeds its addressable shard of the
+``batch`` axis (``jax.make_array_from_process_local_data``); in this
+container there is one process, so the pipeline degenerates to device_put
+with the global sharding — the code path is identical either way.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    """Background-thread prefetch of host batches (depth-bounded)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._it = it
+        self._q = collections.deque()
+        self._depth = depth
+        self._lock = threading.Condition()
+        self._done = False
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                with self._lock:
+                    while len(self._q) >= self._depth:
+                        self._lock.wait(0.1)
+                    self._q.append(item)
+                    self._lock.notify_all()
+        finally:
+            with self._lock:
+                self._done = True
+                self._lock.notify_all()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        with self._lock:
+            while not self._q and not self._done:
+                self._lock.wait(0.1)
+            if self._q:
+                item = self._q.popleft()
+                self._lock.notify_all()
+                return item
+        raise StopIteration
+
+
+def sharded_batches(make_batch: Callable[[int], dict], start_step: int = 0,
+                    sharding=None, prefetch: int = 2):
+    """Iterator of device batches from a (step -> host batch) function."""
+    def gen():
+        step = start_step
+        while True:
+            host = make_batch(step)
+            if sharding is not None:
+                dev = {k: jax.device_put(v, sharding[k] if isinstance(sharding, dict)
+                                         else sharding) for k, v in host.items()}
+            else:
+                dev = host
+            yield step, dev
+            step += 1
+
+    return Prefetcher(gen(), depth=prefetch)

@@ -1,0 +1,2 @@
+"""Distribution: logical sharding rules, collectives, pipeline parallelism, fault tolerance."""
+from . import sharding

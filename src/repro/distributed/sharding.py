@@ -1,0 +1,157 @@
+"""Logical-axis sharding: rules mapping logical names -> mesh axes.
+
+MaxText-style GSPMD approach: parameters/activations carry *logical* axis
+names; a rule table maps each name to a mesh axis (or None = replicated).
+``spec_for`` enforces divisibility — if a dim doesn't divide by the mesh
+axis size it silently falls back to replication, which is what makes the
+whole 10-arch zoo (40 heads, 6 heads, odd vocabs, batch=1 long-context)
+shardable under one rule set.
+
+A process-wide context (``use_mesh_rules``) lets model code call
+``logical_constraint(x, axes)`` without threading mesh/rules through every
+function; outside the context it is a no-op (CPU unit tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# -- default rule tables ------------------------------------------------------
+
+# weights + activations, training (TP over 'model', DP/FSDP over 'data'(+pod))
+TRAIN_RULES = {
+    # weight axes
+    "vocab": "model",
+    "embed": None,            # -> "data" when cfg.fsdp (ZeRO-3 style)
+    "embed_table": None,      # embedding/unembed d_model dim: never fsdp
+    "mlp": "model",
+    "experts": "model",
+    "q_dim": "model",         # fused heads*head_dim projections
+    "kv_dim": "model",
+    "q_lora": None,
+    "kv_lora": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "layers": None,
+    "conv": None,
+    # activation axes
+    "batch": ("pod", "data"),
+    "seq": "model",           # sequence parallelism on the residual stream
+    "heads": "model",
+    "kv_seq": "model",
+    "expert_cap": ("pod", "data"),
+}
+
+# serving: weights TP'd over 'model'; MoE experts spread over 'data' too
+SERVE_RULES = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "experts": ("pod", "data"),
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "kv_seq": "model",
+})
+
+
+def rules_for(cfg, mode: str) -> dict:
+    rules = dict(TRAIN_RULES if mode == "train" else SERVE_RULES)
+    if getattr(cfg, "fsdp", False) and mode == "train":
+        rules["embed"] = ("pod", "data")
+    if not getattr(cfg, "seq_shard_activations", True):
+        rules["seq"] = None
+    overrides = getattr(cfg, "sharding_overrides", None)
+    if overrides:
+        rules.update(dict(overrides))
+    return rules
+
+
+# -- spec construction with divisibility fallback -----------------------------
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= _axis_size(mesh, a)
+        return out
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+def _present(mesh: Mesh, axis):
+    """Filter rule entries down to axes that exist in this mesh."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh.shape)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return axis if axis in mesh.shape else None
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int], mesh: Mesh,
+             rules: dict) -> P:
+    """Logical axes tuple + concrete shape -> PartitionSpec (divisibility-safe)."""
+    used = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        axis = _present(mesh, rules.get(name)) if name else None
+        if axis is not None:
+            flat = axis if isinstance(axis, tuple) else (axis,)
+            if any(a in used for a in flat) or dim % _axis_size(mesh, axis) != 0:
+                axis = None
+            else:
+                used.update(flat)
+        parts.append(axis)
+    return P(*parts)
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes tuple: plain tuple of axis names / None (NamedTuples
+    like optimizer states are pytrees, not leaves)."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(specs_tree, shapes_tree, mesh: Mesh, rules: dict):
+    """Map a specs tree (+ matching shapes tree) to NamedShardings."""
+    def one(axes, shaped):
+        return NamedSharding(mesh, spec_for(axes, shaped.shape, mesh, rules))
+
+    return jax.tree.map(one, specs_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+
+# -- ambient mesh context ------------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: dict):
+    # NamedSharding carries its mesh, so no ambient jax mesh is required —
+    # the context only records (mesh, rules) for logical_constraint.
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh_rules():
+    return getattr(_ctx, "state", None)
+
+
+def logical_constraint(x, axes):
+    """with_sharding_constraint by logical axes; no-op outside a mesh context."""
+    state = current_mesh_rules()
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = spec_for(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  afpm_matmul  — segmented (split-float) approximate matmul on the MXU;
+                 the TPU-native image of the paper's mantissa segmentation
+  afpm_bitwise — bit-level AFPM datapath on the VPU (paper-faithful)
+  ssd_scan     — Mamba2 SSD chunked scan (mamba2/zamba2 architectures)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
+in ``ops.py`` (TPU -> Pallas, CPU -> XLA reference; tests run the kernels
+in interpret mode).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the exact semantics its kernel must match
+(tests sweep shapes/dtypes and assert_allclose kernel-vs-ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.afpm import AFPMConfig, afpm_mult_f32
+
+
+def split_hi_lo_ref(x: jax.Array):
+    """fp32 -> (hi, lo) bf16 segments; hi = RNE bf16, lo = bf16(x - hi)."""
+    x = jnp.asarray(x, jnp.float32)
+    hi = x.astype(jnp.bfloat16)
+    lo = (x - hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    return hi, lo
+
+
+def afpm_matmul_ref(x: jax.Array, w: jax.Array, passes: int = 3) -> jax.Array:
+    """Segmented (split-float) approximate matmul oracle.
+
+    passes=3: AC + AD + BC (BD omitted — the paper's Eq. 6 on the MXU)
+    passes=2: AC + AD (weight low bits dropped)
+    passes=1: AC only (ACL-like)
+    """
+    xh, xl = split_hi_lo_ref(x)
+    wh, wl = split_hi_lo_ref(w)
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out = dot(xh, wh)
+    if passes >= 2:
+        out = out + dot(xl, wh)
+    if passes >= 3:
+        out = out + dot(xh, wl)
+    return out
+
+
+def afpm_bitwise_ref(x: jax.Array, y: jax.Array, cfg: AFPMConfig) -> jax.Array:
+    """Elementwise bit-level AFPM oracle — the core datapath itself."""
+    return afpm_mult_f32(x, y, cfg)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int = 64):
+    """Mamba2 SSD (state-space dual) chunked scan oracle.
+
+    Shapes (single head group for the oracle):
+      x:  (L, H, P)   inputs per head
+      dt: (L, H)      positive step sizes
+      A:  (H,)        negative state decay per head
+      B:  (L, N)      input->state projection (shared across heads, "G" groups=1)
+      C:  (L, N)      state->output projection
+    Returns y: (L, H, P).
+
+    Reference semantics: per head h, state S (N, P):
+      S_t = exp(A_h * dt_t) * S_{t-1} + dt_t * B_t^T (x_t scaled)
+      y_t = C_t S_t
+    computed with a plain sequential scan (the kernel blocks it by chunks).
+    """
+    L, H, P = x.shape
+    N = B.shape[-1]
+
+    def head(xh, dth, Ah):
+        # xh: (L, P), dth: (L,)
+        decay = jnp.exp(Ah * dth)  # (L,)
+
+        def step(S, t):
+            xt, dt_t, dec, Bt, Ct = t
+            S = dec * S + dt_t * (Bt[:, None] * xt[None, :])  # (N, P)
+            y = Ct @ S  # (P,)
+            return S, y
+
+        S0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, S0, (xh, dth, decay, B, C))
+        return ys  # (L, P)
+
+    y = jax.vmap(head, in_axes=(1, 1, 0), out_axes=1)(
+        x.astype(jnp.float32), dt.astype(jnp.float32), A.astype(jnp.float32)
+    )
+    return y
+
+
+def ssd_scan_chunked_ref(x, dt, A, B, C, chunk: int = 128):
+    """Chunked SSD in pure jnp — the same math/FLOP structure as the Pallas
+    kernel (used as the CPU/XLA execution path so dry-run cost analysis
+    reflects the chunked algorithm, and as a second oracle in tests)."""
+    L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    Bc = B.astype(jnp.float32).reshape(nc, Q, N)
+    Cc = C.astype(jnp.float32).reshape(nc, Q, N)
+    t_idx = jnp.arange(Q)[:, None]
+    s_idx = jnp.arange(Q)[None, :]
+
+    def head(xh, dth, Ah):
+        xc = xh.reshape(nc, Q, P)
+        dtc = dth.reshape(nc, Q)
+
+        def chunk_body(S, inp):
+            xq, dq, Bq, Cq = inp
+            l = Ah * jnp.cumsum(dq)
+            CB = Cq @ Bq.T
+            # clamp: only t>=s is used, where l_t - l_s <= 0; the clamp keeps
+            # the masked upper triangle finite (inf would NaN the where-grad)
+            ratio = jnp.exp(jnp.minimum(l[:, None] - l[None, :], 0.0))
+            M = jnp.where(t_idx >= s_idx, CB * ratio * dq[None, :], 0.0)
+            y = M @ xq + (Cq * jnp.exp(l)[:, None]) @ S
+            w = dq * jnp.exp(l[-1] - l)
+            S_new = jnp.exp(l[-1]) * S + (Bq * w[:, None]).T @ xq
+            return S_new, y
+
+        S0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(chunk_body, S0, (xc, dtc, Bc, Cc))
+        return ys.reshape(L, P)
+
+    return jax.vmap(head, in_axes=(1, 1, 0), out_axes=1)(x, dt, A)

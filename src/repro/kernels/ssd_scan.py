@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (state-space duality).
+
+The SSD insight: a chunked selective-state-space scan decomposes into
+MXU-friendly matmuls (intra-chunk quadratic part + low-rank state carry),
+with the recurrence surviving only at chunk granularity.  The chunk
+recurrence is carried in a VMEM scratch state (N, P) that persists across
+grid steps — the grid's chunk axis is sequential ("arbitrary"), the head
+axis parallel.
+
+Used by the mamba2-130m and zamba2-7b architectures; it is the compute
+hot-spot that makes `long_500k` sub-quadratic.
+
+All intra-chunk math in fp32 on (Q, .) tiles:
+  l_t    = A_h * cumsum(dt)[t]                 (log cumulative decay)
+  y[t]   = sum_{s<=t} (C_t . B_s) dt_s e^{l_t - l_s} x_s   (intra, matmuls)
+         + (C_t e^{l_t}) @ S_prev                          (state carry)
+  S_new  = e^{l_Q} S_prev + sum_s dt_s e^{l_Q - l_s} B_s x_s^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *, nc: int):
+    cid = pl.program_id(1)
+
+    @pl.when(cid == 0)
+    def _reset():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q,)
+    A = a_ref[0, 0].astype(jnp.float32)     # scalar (negative)
+    B = b_ref[...].astype(jnp.float32)      # (Q, N)
+    C = c_ref[...].astype(jnp.float32)      # (Q, N)
+    Q = x.shape[0]
+
+    l = A * jnp.cumsum(dt)                  # (Q,) log cumulative decay
+    l_col = l[:, None]                      # (Q, 1)
+
+    # intra-chunk quadratic term: M[t,s] = (C_t.B_s) dt_s e^{l_t-l_s} [t>=s]
+    CB = jnp.dot(C, B.T, preferred_element_type=jnp.float32)     # (Q, Q)
+    # clamped: only t>=s used (l_t-l_s <= 0); keeps masked region finite
+    ratio = jnp.exp(jnp.minimum(l_col - l[None, :], 0.0))        # e^{l_t-l_s}
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    M = jnp.where(t_idx >= s_idx, CB * ratio * dt[None, :], 0.0)
+    y = jnp.dot(M, x, preferred_element_type=jnp.float32)        # (Q, P)
+
+    # inter-chunk carry: y += (C ∘ e^{l_t}) @ S_prev
+    S_prev = s_ref[...]                                          # (N, P)
+    y = y + jnp.dot(C * jnp.exp(l_col), S_prev, preferred_element_type=jnp.float32)
+
+    # state update: S = e^{l_Q} S_prev + (B ∘ dt e^{l_Q - l_s})^T @ x
+    lQ = l[-1]
+    w = dt * jnp.exp(lQ - l)                                     # (Q,)
+    s_ref[...] = jnp.exp(lQ) * S_prev + jnp.dot(
+        (B * w[:, None]).T, x, preferred_element_type=jnp.float32
+    )
+
+    y_ref[0] = y
+
+
+def ssd_scan_pallas(
+    x: jax.Array,   # (L, H, P)
+    dt: jax.Array,  # (L, H)
+    A: jax.Array,   # (H,)
+    B: jax.Array,   # (L, N)
+    C: jax.Array,   # (L, N)
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> jax.Array:
+    L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    if L % Q:
+        raise ValueError(f"seq len {L} not divisible by chunk {Q}")
+    nc = L // Q
+
+    # head-major layout for the grid
+    xh = jnp.moveaxis(x, 1, 0)      # (H, L, P)
+    dth = jnp.moveaxis(dt, 1, 0)    # (H, L)
+    Ah = A.reshape(H, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=(H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, Q), lambda h, c: (h, c)),
+            pl.BlockSpec((1, 1), lambda h, c: (h, 0)),
+            pl.BlockSpec((Q, N), lambda h, c: (c, 0)),
+            pl.BlockSpec((Q, N), lambda h, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, L, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(xh, dth, Ah, B, C)
+    return jnp.moveaxis(out, 0, 1)  # (L, H, P)

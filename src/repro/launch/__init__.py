@@ -1,0 +1,1 @@
+"""Launch: production meshes, input specs, step functions, dry-run, train/serve drivers."""

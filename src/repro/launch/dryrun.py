@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, abstract params/state
+(ShapeDtypeStruct only — nothing is allocated), the real step function
+(launch/steps.py), and runs ``jax.jit(...).lower().compile()``; it then
+records ``memory_analysis()``, ``cost_analysis()``, loop-aware collective
+bytes parsed from the compiled SPMD module, and the three roofline terms,
+as a JSON artifact under benchmarks/artifacts/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--jobs 4]   # sweep every cell
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_arch, list_archs  # noqa: E402
+from repro.distributed.sharding import (rules_for, tree_shardings,  # noqa: E402
+                                        use_mesh_rules)
+from repro.launch import hlo_analysis, specs, steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def _mem_dict(mem):
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                + mem.output_size_in_bytes
+                                - mem.alias_size_in_bytes),
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Build + lower + compile one cell; returns the result record."""
+    cfg = specs.cell_config(get_arch(arch), shape_name)
+    ok, reason = specs.shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": reason}
+    sh = specs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    mode = "train" if sh["kind"] == "train" else "serve"
+    rules = rules_for(cfg, mode)
+    t0 = time.time()
+
+    with use_mesh_rules(mesh, rules):
+        if sh["kind"] == "train":
+            params_abs, pspecs = specs.abstract_params(
+                cfg, dtype=jnp.dtype(cfg.param_dtype))
+            opt_cfg, opt_init, opt_apply, opt_specs_fn = steps.make_optimizer(cfg)
+            opt_abs = jax.eval_shape(partial(opt_init, cfg=opt_cfg), params_abs)
+            param_sh = tree_shardings(pspecs, params_abs, mesh, rules)
+            opt_sh = tree_shardings(opt_specs_fn(pspecs), opt_abs, mesh, rules)
+            batch_abs = specs.batch_specs(cfg, shape_name)
+            batch_sh = tree_shardings(
+                specs.batch_axes_tree(batch_abs), batch_abs, mesh, rules)
+            fn = steps.make_train_step(cfg, opt_cfg, opt_apply)
+            jitted = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif sh["kind"] == "prefill":
+            params_abs, pspecs = specs.abstract_params(cfg, dtype=jnp.bfloat16)
+            param_sh = tree_shardings(pspecs, params_abs, mesh, rules)
+            batch_abs = specs.batch_specs(cfg, shape_name)
+            batch_sh = tree_shardings(
+                specs.batch_axes_tree(batch_abs), batch_abs, mesh, rules)
+            S_dec = cfg.decoder_len if cfg.frontend == "audio_stub" else sh["seq"]
+            fn = steps.make_prefill_step(cfg, max_len=S_dec)
+            jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            params_abs, pspecs = specs.abstract_params(cfg, dtype=jnp.bfloat16)
+            param_sh = tree_shardings(pspecs, params_abs, mesh, rules)
+            B, S = sh["batch"], sh["seq"]
+            max_len = min(S, 4096) if cfg.frontend == "audio_stub" else S
+            if cfg.frontend == "audio_stub":
+                cfg = dataclasses.replace(cfg, enc_len=S)
+            state_abs = specs.abstract_state(cfg, B, max_len)
+            st_axes = specs.state_axes_tree(state_abs)
+            state_sh = tree_shardings(st_axes, state_abs, mesh, rules)
+            token_abs = specs.SDS((B, 1), jnp.int32)
+            token_sh = NamedSharding(
+                mesh, P(("pod", "data") if multi_pod else "data", None)
+                if B % (mesh.shape.get("data", 1)) == 0 else P())
+            pos_abs = specs.SDS((), jnp.int32)
+            fn = steps.make_decode_step(cfg)
+            jitted = jax.jit(
+                fn, in_shardings=(param_sh, state_sh, token_sh,
+                                  NamedSharding(mesh, P())),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, state_abs, token_abs, pos_abs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    cost = hlo_analysis.loop_aware_cost(hlo_text)
+    cost["xla_flops"] = compiled.cost_analysis().get("flops", 0.0)
+    coll = hlo_analysis.collective_bytes(hlo_text)
+    mflops = specs.model_flops(cfg, shape_name)
+    terms = hlo_analysis.roofline_terms(cost, coll, n_chips, model_flops=mflops)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _mem_dict(mem),
+        "roofline": terms,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir=ARTIFACT_DIR):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:  # failures ARE the signal the dry-run exists for
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dominant={r['dominant']}"
+                 f" frac={r.get('roofline_fraction', 0):.3f}"
+                 f" mem/chip={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB"
+                 f" compile={rec['compile_s']:.0f}s")
+    print(f"[dryrun] {arch} {shape_name} {mesh_tag}: {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(specs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s, mp) for a in list_archs() for s in specs.SHAPES
+                 for mp in (False, True)]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = 0
+    for arch, shape_name, mp in cells:
+        rec = run_cell(arch, shape_name, mp)
+        if rec["status"] not in ("ok",) and not rec["status"].startswith("skipped"):
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

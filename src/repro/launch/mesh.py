@@ -1,0 +1,33 @@
+"""Production meshes: 16x16 single pod (256 chips), 2x16x16 multi-pod (512).
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run decides
+how many host devices exist before any mesh is built.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import (launch/dryrun.py does this)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh over however many host devices exist (unit tests)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)

@@ -1,0 +1,166 @@
+"""Input specs: ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device memory is ever allocated here — abstract params come from
+``jax.eval_shape`` over the real initializers, so the dry-run exercises
+exactly the structures the real launcher would build.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.models.layers import unzip
+
+SDS = jax.ShapeDtypeStruct
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str):
+    """(ok, reason) — long_500k only for sub-quadratic archs (assignment)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "skipped(full-attention)"
+    return True, ""
+
+
+def abstract_params(cfg: ArchConfig, dtype=None):
+    """(abstract params tree, logical-axes specs tree) without allocation."""
+    pp = jax.eval_shape(partial(transformer.init, cfg), jax.random.PRNGKey(0))
+    params, specs = unzip(pp)
+    if dtype is not None:
+        params = jax.tree.map(
+            lambda s: SDS(s.shape, dtype) if jnp.issubdtype(s.dtype, jnp.floating)
+            else s, params)
+    return params, specs
+
+
+def abstract_state(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        partial(transformer.init_state, cfg, batch, max_len,
+                dtype=jnp.dtype(cfg.dtype)))
+
+
+def _whisper_cfg(cfg, seq):
+    return dataclasses.replace(cfg, enc_len=seq)
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str):
+    """Abstract batch for a train/prefill cell (tokens or stub embeds)."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    if cfg.frontend == "audio_stub":
+        out = {
+            "enc_embeds": SDS((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((B, cfg.decoder_len), jnp.int32),
+        }
+        if sh["kind"] == "train":
+            out["targets"] = SDS((B, cfg.decoder_len), jnp.int32)
+        return out
+    if cfg.frontend == "vision_stub":
+        out = {"embeds": SDS((B, S, cfg.d_model), jnp.bfloat16)}
+        if cfg.mrope_sections:
+            out["positions"] = SDS((B, S, 3), jnp.int32)
+        if sh["kind"] == "train":
+            out["targets"] = SDS((B, S), jnp.int32)
+        return out
+    out = {"tokens": SDS((B, S), jnp.int32)}
+    if sh["kind"] == "train":
+        out["targets"] = SDS((B, S), jnp.int32)
+    return out
+
+
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "targets": ("batch", "seq"),
+    "embeds": ("batch", "seq", None),
+    "enc_embeds": ("batch", "seq", None),
+    "positions": ("batch", "seq", None),
+    "token": ("batch", None),
+}
+
+# serving-state leaves -> logical axes, keyed by (dict key, rank)
+STATE_AXES = {
+    ("k", 5): ("layers", "batch", "kv_seq", None, None),
+    ("v", 5): ("layers", "batch", "kv_seq", None, None),
+    ("ckv", 4): ("layers", "batch", "kv_seq", None),
+    ("kpe", 4): ("layers", "batch", "kv_seq", None),
+    ("conv", 4): ("layers", "batch", None, "ssm_inner"),
+    ("state", 5): ("layers", "batch", "ssm_heads", None, None),
+    ("enc_out", 3): ("batch", "seq", None),
+}
+
+
+def state_axes_tree(state_abs):
+    """Map the abstract serving state to logical-axes tuples per leaf."""
+    def visit(path, leaf):
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = p.key
+                break
+        axes = STATE_AXES.get((key, leaf.ndim))
+        if axes is None:
+            return (None,) * leaf.ndim
+        return axes
+
+    return jax.tree_util.tree_map_with_path(visit, state_abs)
+
+
+def batch_axes_tree(batch_abs):
+    return {k: BATCH_AXES.get(k, (None,) * v.ndim)[:v.ndim] for k, v in batch_abs.items()}
+
+
+def cell_config(cfg: ArchConfig, shape_name: str) -> ArchConfig:
+    """Shape-dependent config tweaks (whisper encoder length; decode uses
+    inference numerics by default)."""
+    sh = SHAPES[shape_name]
+    if cfg.frontend == "audio_stub":
+        cfg = _whisper_cfg(cfg, sh["seq"])
+    return cfg
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """MODEL_FLOPS for the roofline: 6*N_active*D (train) / 2*N_active*D
+    (inference fwd) + causal attention quadratic terms."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    n_active = cfg.active_param_count()
+    hd = cfg.resolved_head_dim
+    attn_layers = [s for s in cfg.layer_specs() if s.attn not in ("none",)]
+    if cfg.frontend == "audio_stub":
+        # decoder runs on decoder_len tokens; encoder on S
+        dec_T = B * cfg.decoder_len
+        enc_flops_tok = cfg.encoder_layers * (4 * cfg.d_model ** 2 + 3 * cfg.d_model * cfg.d_ff)
+        if sh["kind"] == "train":
+            base = 6 * n_active * dec_T + 6 * enc_flops_tok * B * S
+        elif sh["kind"] == "prefill":
+            base = 2 * n_active * dec_T + 2 * enc_flops_tok * B * S
+        else:
+            base = 2 * n_active * B + 4 * B * S * cfg.n_heads * hd * len(attn_layers)
+        return float(base)
+
+    if sh["kind"] == "train":
+        base = 6 * n_active * B * S
+        attn = sum(6 * B * (min(S, sp.window if sp.attn == "local" else S)) * S
+                   * cfg.n_heads * hd for sp in attn_layers)
+        return float(base + attn)
+    if sh["kind"] == "prefill":
+        base = 2 * n_active * B * S
+        attn = sum(2 * B * (min(S, sp.window if sp.attn == "local" else S)) * S
+                   * cfg.n_heads * hd for sp in attn_layers)
+        return float(base + attn)
+    # decode: one token against an S-deep cache
+    base = 2 * n_active * B
+    attn = sum(4 * B * min(S, sp.window if sp.attn == "local" else S)
+               * cfg.n_heads * hd for sp in attn_layers)
+    return float(base + attn)

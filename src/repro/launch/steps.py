@@ -1,0 +1,91 @@
+"""Step functions: train_step (grad-accum + AdamW), prefill_step, decode_step.
+
+These are the exact functions the dry-run lowers and the real launcher
+executes — one code path for both.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.optim import adafactor, adamw
+
+
+def make_optimizer(cfg: ArchConfig, **overrides):
+    """(opt_cfg, init_fn, apply_fn, moment_specs_fn) for the arch's optimizer.
+
+    moment_specs_fn maps the params' logical-axes tree to the optimizer
+    state's logical-axes tree (used by the dry-run to shard opt state).
+    """
+    if cfg.optimizer == "adafactor":
+        opt_cfg = adafactor.AdafactorConfig(**overrides)
+
+        def specs_fn(pspecs):
+            def one(axes):
+                return adafactor.FactoredMoment(
+                    row=tuple(axes[:-1]), col=tuple(axes[:-2]) + tuple(axes[-1:]),
+                    full=tuple(axes))
+            # NOTE: non-factored leaves use .full with the param axes; the
+            # placeholder (0,)-shaped leaves fall back to replicated via the
+            # divisibility rule, which is free.
+            v = jax.tree.map(one, pspecs, is_leaf=lambda x: isinstance(x, tuple))
+            return adafactor.AdafactorState(step=(), v=v)
+
+        return opt_cfg, adafactor.init, adafactor.apply_updates, specs_fn
+
+    opt_cfg = adamw.AdamWConfig(moment_dtype=cfg.moment_dtype, **overrides)
+
+    def specs_fn(pspecs):
+        return adamw.OptState(step=(), mu=pspecs, nu=pspecs)
+
+    return opt_cfg, adamw.init, adamw.apply_updates, specs_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg=None, opt_apply=None):
+    accum = max(1, cfg.grad_accum)
+    if opt_cfg is None or opt_apply is None:
+        opt_cfg, _, opt_apply, _ = make_optimizer(cfg)
+
+    def loss_for(p, mb):
+        return transformer.loss_fn(p, cfg, mb)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_for)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((accum, a.shape[0] // accum) + a.shape[1:]),
+                batch)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_for)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+        new_params, new_opt, metrics = opt_apply(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int):
+    def prefill_step(params, batch):
+        return transformer.prefill(params, cfg, batch, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, state, token, pos):
+        return transformer.decode_step(params, cfg, {"token": token}, state, pos)
+
+    return decode_step

@@ -1,0 +1,2 @@
+"""Model zoo: transformer stacks (dense/MoE/MLA/SSM/hybrid/enc-dec/VLM) + ResNet."""
+from . import attention, layers, moe, ssm, transformer

@@ -1,0 +1,181 @@
+"""ResNet-18 (CIFAR variant) — the paper's Table IV workload.
+
+Convolutions route through the numerics config: ``exact`` mode uses the
+native convolution; ``emulated`` mode lowers each conv to im2col + the
+bit-level approximate matmul (every scalar product goes through the
+selected multiplier — the paper's §IV-C methodology: train exactly, infer
+approximately).  BatchNorm statistics are part of a separate ``state``
+tree (train mode updates them; inference uses the running stats, fused
+into scale/shift so no multipliers are spent on normalization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.afpm import AFPMConfig, afpm_matmul_emulated
+from repro.core.numerics import NumericsConfig, nmatmul
+from repro.core.registry import get_multiplier
+
+from .layers import PP, normal
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    num_classes: int = 10
+    widths: tuple = (64, 128, 256, 512)
+    blocks: tuple = (2, 2, 2, 2)
+    numerics: NumericsConfig = NumericsConfig(mode="exact", compute_dtype="float32")
+
+
+def conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return PP(normal(key, (kh, kw, cin, cout), (2.0 / fan_in) ** 0.5),
+              (None, None, None, "mlp"))
+
+
+def bn_init(c):
+    return {
+        "scale": PP(jnp.ones((c,), jnp.float32), (None,)),
+        "bias": PP(jnp.zeros((c,), jnp.float32), (None,)),
+    }
+
+
+def bn_state_init(c):
+    return {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+
+
+def conv2d(x, w, stride=1, numerics: NumericsConfig | None = None):
+    """NHWC conv; approximate numerics use im2col + the emulated multiplier."""
+    if numerics is None or numerics.mode == "exact":
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    kh, kw, cin, cout = w.shape
+    B, H, W, _ = x.shape
+    Ho, Wo = -(-H // stride), -(-W // stride)
+    # im2col with XLA-compatible SAME padding (asymmetric under stride)
+    th = max((Ho - 1) * stride + kh - H, 0)
+    tw = max((Wo - 1) * stride + kw - W, 0)
+    ph_lo, pw_lo = th // 2, tw // 2
+    xp = jnp.pad(x, ((0, 0), (ph_lo, th - ph_lo), (pw_lo, tw - pw_lo), (0, 0)))
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                xp[:, i:i + (Ho - 1) * stride + 1:stride,
+                   j:j + (Wo - 1) * stride + 1:stride, :])
+    cols = jnp.concatenate(patches, axis=-1).reshape(B * Ho * Wo, kh * kw * cin)
+    wmat = w.reshape(kh * kw * cin, cout)
+    name = numerics.multiplier.lower()
+    if name.startswith(("ac", "acl")) and not name.startswith("ac-"):
+        out = afpm_matmul_emulated(cols, wmat, numerics.afpm())
+    else:
+        from repro.core.numerics import _generic_emulated_matmul
+
+        out = _generic_emulated_matmul(cols, wmat, get_multiplier(numerics.multiplier))
+    return out.reshape(B, Ho, Wo, cout)
+
+
+def batchnorm(params, state, x, train: bool, momentum=0.9, eps=1e-5):
+    if train:
+        mean = x.mean(axis=(0, 1, 2))
+        var = x.var(axis=(0, 1, 2))
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    inv = jax.lax.rsqrt(var + eps) * params["scale"]
+    return (x - mean) * inv + params["bias"], new_state
+
+
+def _basic_block_init(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": conv_init(ks[0], 3, 3, cin, cout), "bn1": bn_init(cout),
+        "conv2": conv_init(ks[1], 3, 3, cout, cout), "bn2": bn_init(cout),
+    }
+    s = {"bn1": bn_state_init(cout), "bn2": bn_state_init(cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_init(ks[2], 1, 1, cin, cout)
+        p["bn_proj"] = bn_init(cout)
+        s["bn_proj"] = bn_state_init(cout)
+    return p, s
+
+
+def init(cfg: ResNetConfig, key):
+    ks = jax.random.split(key, 2 + sum(cfg.blocks))
+    params = {"stem": conv_init(ks[0], 3, 3, 3, cfg.widths[0]),
+              "bn_stem": bn_init(cfg.widths[0])}
+    state = {"bn_stem": bn_state_init(cfg.widths[0])}
+    ki = 1
+    cin = cfg.widths[0]
+    for si, (w, n) in enumerate(zip(cfg.widths, cfg.blocks)):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            p, s = _basic_block_init(ks[ki], cin, w, stride)
+            ki += 1
+            params[f"s{si}b{bi}"] = p
+            state[f"s{si}b{bi}"] = s
+            cin = w
+    params["fc"] = PP(normal(ks[-1], (cfg.widths[-1], cfg.num_classes),
+                             cfg.widths[-1] ** -0.5), (None, None))
+    params["fc_b"] = PP(jnp.zeros((cfg.num_classes,), jnp.float32), (None,))
+    return params, state
+
+
+def _block_apply(p, s, x, stride, cfg, train):
+    h, s1 = batchnorm(p["bn1"], s["bn1"], conv2d(x, p["conv1"], stride, cfg.numerics), train)
+    h = jax.nn.relu(h)
+    h, s2 = batchnorm(p["bn2"], s["bn2"], conv2d(h, p["conv2"], 1, cfg.numerics), train)
+    if "proj" in p:
+        x, s3 = batchnorm(p["bn_proj"], s["bn_proj"],
+                          conv2d(x, p["proj"], stride, cfg.numerics), train)
+        new_s = {"bn1": s1, "bn2": s2, "bn_proj": s3}
+    else:
+        new_s = {"bn1": s1, "bn2": s2}
+    return jax.nn.relu(h + x), new_s
+
+
+def apply(params, state, x, cfg: ResNetConfig, train: bool = False):
+    """x: (B, 32, 32, 3) -> logits (B, classes); returns (logits, new_state)."""
+    new_state = {}
+    h, new_state["bn_stem"] = batchnorm(
+        params["bn_stem"], state["bn_stem"],
+        conv2d(x, params["stem"], 1, cfg.numerics), train)
+    h = jax.nn.relu(h)
+    for si, (w, n) in enumerate(zip(cfg.widths, cfg.blocks)):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h, s = _block_apply(params[f"s{si}b{bi}"], state[f"s{si}b{bi}"],
+                                h, stride, cfg, train)
+            new_state[f"s{si}b{bi}"] = s
+    h = h.mean(axis=(1, 2))
+    # final classifier also goes through the configured multiplier
+    if cfg.numerics.mode == "exact":
+        logits = h @ params["fc"]
+    else:
+        name = cfg.numerics.multiplier.lower()
+        if name.startswith(("ac", "acl")) and not name.startswith("ac-"):
+            logits = afpm_matmul_emulated(h, params["fc"], cfg.numerics.afpm())
+        else:
+            from repro.core.numerics import _generic_emulated_matmul
+
+            logits = _generic_emulated_matmul(h, params["fc"],
+                                              get_multiplier(cfg.numerics.multiplier))
+    return logits + params["fc_b"], new_state
+
+
+def loss_fn(params, state, batch, cfg: ResNetConfig):
+    logits, new_state = apply(params, state, batch["images"], cfg, train=True)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (lse - gold).mean(), new_state

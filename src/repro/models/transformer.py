@@ -1,0 +1,383 @@
+"""Model assembly: LM decoder stacks (all 10 archs) + whisper-style enc-dec.
+
+Depth is organized as ``segments``: ``(repeats, pattern)`` pairs scanned
+with params stacked on a leading 'layers' axis (compile time flat in
+depth), with configurable remat.  ``shared=True`` pattern entries reuse a
+single weight set across repeats (zamba2) while still carrying
+per-application caches.
+
+Three execution modes:
+  train   — no caches collected (memory-clean loss path)
+  prefill — no input caches; every block *returns* its cache (SSM blocks
+            compute their final state in closed form)
+  decode  — single-token step against the caches
+
+Public API:
+  init(cfg, key)                          -> PP tree (use layers.unzip)
+  loss_fn(params, cfg, batch)             -> scalar CE (chunked over seq)
+  prefill(params, cfg, batch, max_len)    -> (last_logits, state)
+  decode_step(params, cfg, batch, state, pos) -> (logits, state)
+  init_state(cfg, batch, max_len)         -> serving state (abstract-init-able)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (dense_init, embed_init, embed_lookup, mlp_apply,
+                     mlp_init, rmsnorm, rmsnorm_init, softcap, stack_init)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, spec):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if spec.kind == "ssm":
+        return {"ln1": rmsnorm_init(d), "ssm": ssm_mod.ssm_init(ks[0], cfg)}
+    p = {"ln1": rmsnorm_init(d), "ln2": rmsnorm_init(d)}
+    if spec.attn == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg)
+    elif spec.attn != "none":
+        p["attn"] = attn.gqa_init(ks[0], cfg)
+    if cfg.encoder_layers:
+        p["cross"] = attn.cross_attn_init(ks[2], cfg)
+        p["ln_cross"] = rmsnorm_init(d)
+    if spec.kind == "moe":
+        p["mlp"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.dense_ff)
+    return p
+
+
+def block_apply(params, x, cfg, spec, positions, ncfg, mode, cache=None,
+                q_offset=0, causal=True, enc=None):
+    """Returns (x, new_cache_or_None)."""
+    if spec.kind == "ssm":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        h, new_cache = ssm_mod.ssm_apply(
+            params["ssm"], h, cfg, ncfg, cache=cache,
+            want_state=(mode == "prefill"),
+        )
+        x = logical_constraint(x + h, ("batch", "seq", None))
+        return x, new_cache
+
+    new_cache = None
+    if "attn" in params:
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        if spec.attn == "mla":
+            h, new_cache = attn.mla_apply(params["attn"], h, cfg, spec, positions,
+                                          ncfg, cache=cache, q_offset=q_offset)
+        else:
+            h, new_cache = attn.gqa_apply(params["attn"], h, cfg, spec, positions,
+                                          ncfg, cache=cache, q_offset=q_offset,
+                                          causal=causal)
+        x = logical_constraint(x + h, ("batch", "seq", None))
+        if mode == "train":
+            new_cache = None
+    if "cross" in params and enc is not None:
+        h = rmsnorm(params["ln_cross"], x, cfg.norm_eps)
+        x = x + attn.cross_attn_apply(params["cross"], h, enc, cfg, ncfg)
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if spec.kind == "moe":
+        h = moe_mod.moe_apply(params["mlp"], h, cfg, ncfg)
+    else:
+        h = mlp_apply(params["mlp"], h, ncfg).astype(x.dtype)
+    x = logical_constraint(x + h, ("batch", "seq", None))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# serving-state (cache) construction
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg, spec, batch, max_len, dtype):
+    if spec.kind == "ssm":
+        return ssm_mod.ssm_cache_init(cfg, batch, dtype)
+    if spec.attn == "none":
+        return None
+    if spec.attn == "mla":
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+        }
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def init_state(cfg, batch, max_len, dtype=jnp.bfloat16):
+    """Serving state: per-block caches (stacked over repeats) + enc_out slot."""
+    layers = []
+    for repeats, pattern in cfg.segments:
+        seg = {}
+        for pi, spec in enumerate(pattern):
+            c = _block_cache(cfg, spec, batch, max_len, dtype)
+            if c is not None:
+                seg[pi] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (repeats,) + a.shape), c
+                )
+        layers.append(seg)
+    state = {"layers": layers}
+    if cfg.encoder_layers:
+        state["enc_out"] = jnp.zeros((batch, cfg.enc_len, cfg.d_model), dtype)
+    return state
+
+
+def _merge_block_cache(spec, empty, run):
+    """Write prefill-produced cache (length S) into the max_len buffer."""
+    if spec.kind == "ssm":
+        return jax.tree.map(lambda e, r: r.astype(e.dtype), empty, run)
+
+    def write(buf, new, taxis):
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), 0, axis=taxis
+        )
+
+    out = {}
+    for k in empty:
+        taxis = empty[k].ndim - (3 if k in ("k", "v") else 2)
+        out[k] = write(empty[k], run[k], taxis)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decoder stack
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def stack_params_init(cfg, key):
+    params = {}
+    nseg = sum(len(p) for _, p in cfg.segments)
+    keys = jax.random.split(key, nseg + 1)
+    ki = 0
+    for si, (repeats, pattern) in enumerate(cfg.segments):
+        for pi, spec in enumerate(pattern):
+            k = keys[ki]; ki += 1
+            if spec.shared:
+                params[f"seg{si}_p{pi}"] = block_init(k, cfg, spec)
+            else:
+                params[f"seg{si}_p{pi}"] = stack_init(
+                    partial(block_init, cfg=cfg, spec=spec), k, repeats
+                )
+    return params
+
+
+def stack_apply(params, x, cfg, ncfg, positions, mode, caches=None,
+                q_offset=0, causal=True, enc=None):
+    """Run all segments.  Returns (x, new_caches list-of-dicts or None)."""
+    collect = mode != "train"
+    new_caches = []
+    for si, (repeats, pattern) in enumerate(cfg.segments):
+        seg_caches = caches[si] if caches is not None else {}
+        stacked = {pi: params[f"seg{si}_p{pi}"]
+                   for pi, spec in enumerate(pattern) if not spec.shared}
+        shared = {pi: params[f"seg{si}_p{pi}"]
+                  for pi, spec in enumerate(pattern) if spec.shared}
+
+        def seg_body(x, xs, _pattern=pattern, _shared=shared):
+            layer_params, layer_caches = xs
+            out_caches = {}
+            for pi, spec in enumerate(_pattern):
+                p = _shared[pi] if spec.shared else layer_params[pi]
+                c = layer_caches.get(pi)
+                x, nc = block_apply(p, x, cfg, spec, positions, ncfg, mode,
+                                    cache=c, q_offset=q_offset, causal=causal,
+                                    enc=enc)
+                if nc is not None and collect:
+                    out_caches[pi] = nc
+            return x, out_caches
+
+        body = _remat(seg_body, cfg)
+        if repeats == 1:
+            take0 = lambda tree: jax.tree.map(lambda a: a[0], tree)
+            x, outc = body(x, ({pi: take0(v) for pi, v in stacked.items()},
+                               {pi: take0(v) for pi, v in seg_caches.items()}))
+            outc = {pi: jax.tree.map(lambda a: a[None], v) for pi, v in outc.items()}
+        else:
+            x, outc = jax.lax.scan(body, x, (stacked, seg_caches))
+        new_caches.append(outc if collect else {})
+    return x, (new_caches if collect else None)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init(cfg, key):
+    k_emb, k_stack, k_head, k_enc = jax.random.split(key, 4)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        **stack_params_init(cfg, k_stack),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(k_head, cfg.d_model, cfg.vocab,
+                                       ("embed_table", "vocab"))
+    if cfg.encoder_layers:
+        params["encoder"] = encoder_init(cfg, k_enc)
+    return params
+
+
+def _positions_for(cfg, batch, B, S, offset=0):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+def _embed_inputs(params, cfg, batch):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embed_lookup(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.dtype))
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return logical_constraint(x, ("batch", "seq", None))
+
+
+def backbone(params, cfg, batch, mode, caches=None, q_offset=0, enc=None):
+    """Embeds -> (encoder) -> decoder stack -> final norm."""
+    ncfg = cfg.numerics
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = _positions_for(cfg, batch, B, S, offset=q_offset)
+    if cfg.encoder_layers and enc is None:
+        enc = encoder_apply(params["encoder"], cfg, batch, ncfg)
+    x, new_caches = stack_apply(params, x, cfg, ncfg, positions, mode,
+                                caches=caches, q_offset=q_offset, enc=enc)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_caches, enc
+
+
+def logits_fn(params, cfg, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jax.lax.dot_general(
+        hidden.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+        (((hidden.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    logits = logical_constraint(logits, ("batch", "seq", "vocab"))
+    return softcap(logits, cfg.logit_softcap)
+
+
+def loss_fn(params, cfg, batch, batch_chunks: int | None = None):
+    """Causal-LM cross-entropy, chunked over the BATCH dim.
+
+    Chunking over batch (not sequence) preserves the activations' sharding
+    under GSPMD — a (B,S,·)->(B,nc,c,·) sequence reshape would break the
+    'seq' sharding and replicate fp32 logits on every chip.  Each chunk is
+    rematerialized so the backward pass recomputes its logits instead of
+    checkpointing (B_c, S, V).
+    """
+    hidden, _, _ = backbone(params, cfg, batch, mode="train")
+    targets = batch["targets"]
+    B, S = targets.shape
+    if batch_chunks is None:
+        batch_chunks = cfg.loss_batch_chunks
+    nb = batch_chunks if B % batch_chunks == 0 else 1
+    hid = hidden.reshape(nb, B // nb, S, hidden.shape[-1])
+    tgt = targets.reshape(nb, B // nb, S)
+
+    def chunk_loss(carry, xs):
+        h, t = xs
+        lg = logits_fn(params, cfg, h)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, jnp.maximum(t, 0)[..., None], axis=-1)[..., 0]
+        valid = (t >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        loss, count = carry
+        return (loss + nll.sum(), count + valid.sum()), None
+
+    body = jax.checkpoint(chunk_loss, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hid, tgt))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def prefill(params, cfg, batch, max_len=None):
+    """Process the prompt; returns (last-token logits, serving state)."""
+    ref = batch["tokens"] if "tokens" in batch else batch["embeds"]
+    B, S = ref.shape[0], ref.shape[1]
+    max_len = max_len or S
+    hidden, run_caches, enc = backbone(params, cfg, batch, mode="prefill")
+    state = init_state(cfg, B, max_len, dtype=jnp.dtype(cfg.dtype))
+    merged = []
+    for (repeats, pattern), empty_seg, run_seg in zip(cfg.segments,
+                                                      state["layers"], run_caches):
+        seg = {}
+        for pi in empty_seg:
+            seg[pi] = _merge_block_cache(pattern[pi], empty_seg[pi], run_seg[pi])
+        merged.append(seg)
+    state["layers"] = merged
+    if enc is not None:
+        state["enc_out"] = enc.astype(jnp.dtype(cfg.dtype))
+    return logits_fn(params, cfg, hidden[:, -1:]), state
+
+
+def decode_step(params, cfg, batch, state, pos):
+    """One decode step: batch['token'] (B,1) int32; pos = absolute position."""
+    enc = state.get("enc_out")
+    hidden, new_layers, _ = backbone(
+        params, cfg, {"tokens": batch["token"]},
+        mode="decode", caches=state["layers"], q_offset=pos, enc=enc,
+    )
+    new_state = dict(state)
+    new_state["layers"] = new_layers
+    return logits_fn(params, cfg, hidden), new_state
+
+
+# ---------------------------------------------------------------------------
+# whisper-style encoder
+# ---------------------------------------------------------------------------
+
+def _enc_spec(cfg):
+    return dataclasses.replace(cfg.segments[0][1][0], kind="dense", attn="global")
+
+
+def encoder_init(cfg, key):
+    spec = _enc_spec(cfg)
+    enc_cfg = dataclasses.replace(cfg, encoder_layers=0)  # no cross in encoder
+    ks = jax.random.split(key, 2)
+    return {
+        "blocks": stack_init(partial(block_init, cfg=enc_cfg, spec=spec),
+                             ks[0], cfg.encoder_layers),
+        "norm": rmsnorm_init(cfg.d_model),
+    }
+
+
+def encoder_apply(params, cfg, batch, ncfg):
+    x = batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
+    x = logical_constraint(x, ("batch", "seq", None))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    spec = _enc_spec(cfg)
+
+    def body(x, layer_params):
+        x, _ = block_apply(layer_params, x, cfg, spec, positions, ncfg,
+                           mode="train", causal=False)
+        return x, {}
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+    return rmsnorm(params["norm"], x, cfg.norm_eps)

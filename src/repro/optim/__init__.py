@@ -1,0 +1,4 @@
+"""Optimizers: AdamW (dtype-configurable moments), schedules, clipping,
+int8 gradient compression with error feedback."""
+from . import adamw, compression
+from .adamw import AdamWConfig, OptState

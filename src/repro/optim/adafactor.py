@@ -1,0 +1,108 @@
+"""Adafactor (Shazeer & Stern 2018) — the memory-light optimizer for the
+400B/670B-class configs: second moments factored into row/col statistics
+(~0 bytes/param for matrices) and no first moment by default, so a 671B
+model trains in ~1 extra byte/param of optimizer state instead of Adam's 8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import clip_by_global_norm, schedule_lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    beta2: float = 0.999
+    eps: float = 1e-30
+    clip_threshold: float = 1.0      # update RMS clipping (Adafactor d)
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    schedule: str = "cosine"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_dim_factored: int = 128      # factor only dims >= this
+
+    # mirror AdamWConfig's interface bits used by steps/dryrun
+    moment_dtype: str = "float32"
+
+
+class FactoredMoment(NamedTuple):
+    row: jnp.ndarray    # mean of g^2 over the last axis
+    col: jnp.ndarray    # mean of g^2 over the second-to-last axis
+    full: jnp.ndarray   # used when not factored (shape of param or (0,))
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    v: dict  # pytree of FactoredMoment
+
+
+def _factored(p, cfg) -> bool:
+    return (p.ndim >= 2 and p.shape[-1] >= cfg.min_dim_factored
+            and p.shape[-2] >= cfg.min_dim_factored)
+
+
+def init(params, cfg: AdafactorConfig) -> AdafactorState:
+    def one(p):
+        if _factored(p, cfg):
+            return FactoredMoment(
+                row=jnp.zeros(p.shape[:-1], jnp.float32),
+                col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                full=jnp.zeros((0,), jnp.float32),
+            )
+        return FactoredMoment(
+            row=jnp.zeros((0,), jnp.float32),
+            col=jnp.zeros((0,), jnp.float32),
+            full=jnp.zeros(p.shape, jnp.float32),
+        )
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        v=jax.tree.map(one, params),
+    )
+
+
+def apply_updates(params, grads, state: AdafactorState, cfg: AdafactorConfig):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    t = step.astype(jnp.float32)
+    # increasing-decay beta2 hat (original paper eq. 37-ish)
+    beta2t = 1.0 - t ** -0.8
+    beta2t = jnp.minimum(beta2t, cfg.beta2)
+
+    def upd(p, g, v: FactoredMoment):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps
+        if _factored(p, cfg):
+            row = beta2t * v.row + (1 - beta2t) * g2.mean(axis=-1)
+            col = beta2t * v.col + (1 - beta2t) * g2.mean(axis=-2)
+            # rhat = row/col outer product normalized by row mean
+            denom = jnp.sqrt(
+                (row / jnp.maximum(row.mean(axis=-1, keepdims=True), cfg.eps))[..., None]
+                * col[..., None, :])
+            u = g32 / jnp.maximum(denom, cfg.eps)
+            new_v = FactoredMoment(row=row, col=col, full=v.full)
+        else:
+            full = beta2t * v.full + (1 - beta2t) * g2
+            u = g32 / jnp.sqrt(jnp.maximum(full, cfg.eps))
+            new_v = FactoredMoment(row=v.row, col=v.col, full=full)
+        # update clipping: rms(u) <= clip_threshold
+        rms = jnp.sqrt(jnp.mean(u * u) + cfg.eps)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (u + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = jax.tree.leaves(state.v, is_leaf=lambda x: isinstance(x, FactoredMoment))
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_p, AdafactorState(step, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,185 @@
+"""Properties of the mantissa-segmentation AFPM (paper §III-B)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import metrics
+from repro.core.afpm import AFPMConfig, afpm_matmul_emulated, afpm_mult_f32
+
+finite = st.floats(width=32, allow_nan=False, allow_infinity=False, allow_subnormal=False)
+
+
+def _mult(x, y, **kw):
+    return np.asarray(afpm_mult_f32(jnp.float32(x), jnp.float32(y), AFPMConfig(**kw)))
+
+
+# ---- paper-claim validation: MRED/NMED bands of Table IV -------------------
+
+PAPER_MRED = {  # (config kwargs, paper MRED, tolerance factor)
+    "AC4-4": (dict(n=4), 1.38e-3),
+    "AC5-5": (dict(n=5), 3.36e-4),
+    "AC6-6": (dict(n=6), 8.29e-5),
+    "ACL5": (dict(n=5, mode="acl"), 4.16e-2),
+}
+
+
+@pytest.mark.parametrize("label", sorted(PAPER_MRED))
+def test_mred_matches_paper_table4(label):
+    kw, paper = PAPER_MRED[label]
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-4, 4, 100_000).astype(np.float32)
+    y = rng.uniform(-4, 4, 100_000).astype(np.float32)
+    approx = np.asarray(afpm_mult_f32(x, y, AFPMConfig(**kw)))
+    exact = x.astype(np.float64) * y.astype(np.float64)
+    got = metrics.mred(approx, exact)
+    assert paper / 1.5 < got < paper * 1.5, (label, got, paper)
+
+
+def test_error_decreases_with_n():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(50_000).astype(np.float32)
+    y = rng.standard_normal(50_000).astype(np.float32)
+    exact = x.astype(np.float64) * y.astype(np.float64)
+    mreds = [
+        metrics.mred(np.asarray(afpm_mult_f32(x, y, AFPMConfig(n=n))), exact)
+        for n in (3, 4, 5, 6, 7)
+    ]
+    assert all(a > b for a, b in zip(mreds, mreds[1:])), mreds
+
+
+# ---- algebraic properties ---------------------------------------------------
+
+@given(finite, finite)
+@settings(max_examples=300, deadline=None)
+def test_sign_symmetry(x, y):
+    # sign path is exact XOR logic, so |.| and sign factor commute
+    r = _mult(x, y, n=5)
+    r_neg = _mult(-x, y, n=5)
+    np.testing.assert_array_equal(r_neg, -r)
+
+
+@given(finite, finite)
+@settings(max_examples=300, deadline=None)
+def test_commutative(x, y):
+    # A/C and B/D play symmetric roles (incl. the special-case forcing rules)
+    np.testing.assert_array_equal(_mult(x, y, n=5), _mult(y, x, n=5))
+
+
+@given(finite)
+@settings(max_examples=200, deadline=None)
+def test_mult_by_zero_and_one_powers(x):
+    assert _mult(x, 0.0, n=5) == 0.0
+    # powers of two have zero mantissa -> product equals the operand with its
+    # mantissa truncated to 3n bits (paper Fig. 3: inputs keep upper 3n bits)
+    from repro.core.formats import truncate_mantissa
+
+    for p in (1.0, 2.0, 0.5, 4.0):
+        r = float(_mult(x, p, n=5))
+        want = float(np.float32(np.asarray(truncate_mantissa(np.float32(x), 15))) * np.float32(p))
+        if np.isfinite(want) and abs(want) >= float(np.float32(2.0 ** -126)):
+            assert r == want, (x, p, r, want)
+
+
+@given(finite, finite)
+@settings(max_examples=300, deadline=None)
+def test_relative_error_bound(x, y):
+    # AC-n-n truncates at most ~2^-(2n-? ) of each mantissa; conservative
+    # bound: relative error < 2^-(n-1) for all normal operands/results.
+    r = float(_mult(x, y, n=5))
+    want = float(np.float32(x) * np.float32(y))
+    if want == 0.0 or not np.isfinite(want) or abs(want) < 2.0 ** -100:
+        return
+    assert abs(r - want) / abs(want) < 2.0 ** -4, (x, y, r, want)
+
+
+def test_special_values():
+    assert np.isnan(_mult(np.nan, 1.0, n=5))
+    assert np.isinf(_mult(np.inf, 2.0, n=5))
+    assert _mult(np.inf, 2.0, n=5) > 0
+    assert _mult(-np.inf, 2.0, n=5) < 0
+    assert np.isnan(_mult(np.inf, 0.0, n=5))
+    assert _mult(1e30, 1e30, n=5) == np.inf    # overflow -> inf
+    assert _mult(1e-30, 1e-30, n=5) == 0.0     # underflow -> 0 (paper rule)
+
+
+def test_acl_mode_properties():
+    rng = np.random.default_rng(2)
+    x = rng.uniform(0.1, 4, 20_000).astype(np.float32)
+    y = rng.uniform(0.1, 4, 20_000).astype(np.float32)
+    r = np.asarray(afpm_mult_f32(x, y, AFPMConfig(n=5, mode="acl")))
+    exact = x.astype(np.float64) * y.astype(np.float64)
+    assert metrics.mred(r, exact) < 0.08
+    # sign/exponent path still exact: result within 2x of truth always
+    ratio = r / exact
+    assert ratio.min() > 0.5 and ratio.max() < 2.0
+
+
+def test_ablation_knobs_change_error():
+    rng = np.random.default_rng(3)
+    x = rng.uniform(-2, 2, 50_000).astype(np.float32)
+    y = rng.uniform(-2, 2, 50_000).astype(np.float32)
+    exact = x.astype(np.float64) * y.astype(np.float64)
+    full = metrics.mred(np.asarray(afpm_mult_f32(x, y, AFPMConfig(n=5))), exact)
+    no_comp = metrics.mred(
+        np.asarray(afpm_mult_f32(x, y, AFPMConfig(n=5, compensation=False))), exact
+    )
+    with_bd = metrics.mred(
+        np.asarray(afpm_mult_f32(x, y, AFPMConfig(n=5, skip_bd=False))), exact
+    )
+    assert with_bd <= full          # adding BD back only helps accuracy
+    assert no_comp >= full * 0.9    # compensation shouldn't hurt
+
+
+def test_narrow_format_storage():
+    rng = np.random.default_rng(4)
+    x = rng.uniform(-2, 2, 10_000).astype(np.float32)
+    y = rng.uniform(-2, 2, 10_000).astype(np.float32)
+    exact = x.astype(np.float64) * y.astype(np.float64)
+    for fmt, n in (("fp16", 5), ("afp24", 6)):
+        r = np.asarray(afpm_mult_f32(x, y, AFPMConfig(n=n, fmt=fmt)))
+        assert metrics.mred(r, exact) < 0.02, fmt
+
+
+def test_invalid_configs():
+    with pytest.raises(ValueError):
+        afpm_mult_f32(jnp.float32(1), jnp.float32(1), AFPMConfig(n=5, mode="bogus"))
+    with pytest.raises(ValueError):
+        afpm_mult_f32(jnp.float32(1), jnp.float32(1), AFPMConfig(n=12))  # 2n > 23
+
+
+# ---- emulated matmul --------------------------------------------------------
+
+def test_emulated_matmul_matches_elementwise_sum():
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((3, 17, 33)).astype(np.float32)
+    w = rng.standard_normal((33, 9)).astype(np.float32)
+    cfg = AFPMConfig(n=5)
+    got = np.asarray(afpm_matmul_emulated(x, w, cfg, k_chunk=16))
+    prods = np.asarray(afpm_mult_f32(x[..., :, None], w[None, None], cfg))
+    want = prods.sum(axis=-2)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_emulated_matmul_close_to_exact():
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 8)).astype(np.float32)
+    got = np.asarray(afpm_matmul_emulated(x, w, AFPMConfig(n=6)))
+    want = x @ w
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_ste_gradient_is_exact_product_rule():
+    import jax
+
+    from repro.core.afpm import afpm_mult_ste
+
+    cfg = AFPMConfig(n=5)
+    f = lambda x, y: jnp.sum(afpm_mult_ste(x, y, cfg))
+    x = jnp.asarray(np.random.default_rng(7).standard_normal(32), jnp.float32)
+    y = jnp.asarray(np.random.default_rng(8).standard_normal(32), jnp.float32)
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(y), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gy), np.asarray(x), rtol=1e-6)

@@ -1,0 +1,75 @@
+"""The exact multiplier must be bit-identical to host IEEE754 arithmetic."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import exact_mult
+from repro.core.formats import FP16, FP32, np_f32_to_bits
+
+f32 = st.floats(width=32, allow_nan=False, allow_infinity=True, allow_subnormal=True)
+
+
+@given(f32, f32)
+@settings(max_examples=500, deadline=None)
+def test_bit_exact_vs_host_fp32(x, y):
+    x, y = np.float32(x), np.float32(y)
+    got = exact_mult.np_exact_mult_f32(x, y)
+    want = x * y
+    if np.isnan(want):
+        assert np.isnan(got), (x, y, got, want)  # nan payloads may differ
+    else:
+        assert got.view(np.uint32) == want.view(np.uint32), (x, y, got, want)
+
+
+def test_bit_exact_bulk_random():
+    rng = np.random.default_rng(7)
+    # broad dynamic range incl. overflow/underflow/subnormal products
+    x = (rng.standard_normal(100_000) * 10.0 ** rng.integers(-38, 38, 100_000)).astype(np.float32)
+    y = (rng.standard_normal(100_000) * 10.0 ** rng.integers(-38, 38, 100_000)).astype(np.float32)
+    got = exact_mult.np_exact_mult_f32(x, y)
+    want = x * y
+    np.testing.assert_array_equal(got.view(np.uint32), want.view(np.uint32))
+
+
+def test_specials():
+    cases = [
+        (np.float32(0.0), np.float32(-3.5)),
+        (np.float32(-0.0), np.float32(3.5)),
+        (np.float32(np.inf), np.float32(2.0)),
+        (np.float32(-np.inf), np.float32(-2.0)),
+        (np.float32(np.inf), np.float32(0.0)),  # nan
+        (np.float32(np.nan), np.float32(1.0)),
+        (np.float32(1e-44), np.float32(0.5)),   # subnormal input
+        (np.float32(3.4e38), np.float32(10.0)), # overflow
+    ]
+    for x, y in cases:
+        got = exact_mult.np_exact_mult_f32(x, y)
+        want = x * y
+        if np.isnan(want):
+            assert np.isnan(got)
+        else:
+            assert got.view(np.uint32) == want.view(np.uint32), (x, y, got, want)
+
+
+def test_generic_format_fp16_bit_exact():
+    rng = np.random.default_rng(3)
+    x = (rng.standard_normal(50_000) * 10.0 ** rng.integers(-6, 5, 50_000)).astype(np.float16)
+    y = (rng.standard_normal(50_000) * 10.0 ** rng.integers(-6, 5, 50_000)).astype(np.float16)
+    xb = x.view(np.uint16).astype(np.int64)
+    yb = y.view(np.uint16).astype(np.int64)
+    got = exact_mult.np_exact_mult_bits(xb, yb, FP16)
+    want = (x * y).view(np.uint16).astype(np.int64)
+    # nan payloads may differ; compare values
+    gotf = got.astype(np.uint16).view(np.float16)
+    wantf = want.astype(np.uint16).view(np.float16)
+    nan = np.isnan(wantf)
+    np.testing.assert_array_equal(got[~nan], want[~nan])
+    assert np.isnan(gotf[nan]).all()
+
+
+def test_device_exact_is_native():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(256).astype(np.float32)
+    y = rng.standard_normal(256).astype(np.float32)
+    got = np.asarray(exact_mult.exact_mult_f32(x, y))
+    np.testing.assert_array_equal(got, x * y)

@@ -1,0 +1,82 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import formats
+
+
+def test_format_properties():
+    assert formats.FP32.bias == 127
+    assert formats.FP32.sig_bits == 24
+    assert formats.FP16.bias == 15
+    assert formats.BF16.max_exp_field == 255
+    assert formats.FP8_E4M3.total_bits == 8
+    np.testing.assert_allclose(formats.FP32.max_finite, np.finfo(np.float32).max)
+    np.testing.assert_allclose(formats.FP16.max_finite, 65504.0)
+
+
+def test_get_format_unknown():
+    with pytest.raises(ValueError):
+        formats.get_format("fp13")
+
+
+@given(st.floats(width=32, allow_nan=False, allow_infinity=False))
+@settings(max_examples=300, deadline=None)
+def test_np_roundtrip_fp32(x):
+    x = np.float32(x)
+    bits = formats.np_f32_to_bits(x)
+    sign, exp, man = formats.np_decode(bits, formats.FP32)
+    back = formats.np_encode(sign, exp, man, formats.FP32)
+    assert back == bits
+    val = formats.np_decode_to_value(bits, formats.FP32)
+    assert val == np.float64(x)
+
+
+@given(st.floats(width=32, allow_nan=False))
+@settings(max_examples=300, deadline=None)
+def test_np_encode_from_value_matches_cast(x):
+    # float64 -> fp32 RNE must agree with numpy's cast
+    enc = formats.np_encode_from_value(np.float64(x), formats.FP32)
+    want = formats.np_f32_to_bits(np.float32(x))
+    assert enc == want, (x, hex(int(enc)), hex(int(want)))
+
+
+def test_np_encode_from_value_fp16_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(5000).astype(np.float64) * 10.0 ** rng.integers(-6, 5, 5000)
+    enc = formats.np_encode_from_value(x, formats.FP16)
+    want = x.astype(np.float16).view(np.uint16).astype(np.int64)
+    np.testing.assert_array_equal(enc, want)
+
+
+def test_jnp_bit_roundtrip():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(1000).astype(np.float32)
+    back = np.asarray(formats.jnp_bits_to_f32(formats.jnp_f32_to_bits(x)))
+    np.testing.assert_array_equal(back, x)
+
+
+def test_jnp_quantize_bf16_matches_cast():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(4096).astype(np.float32) * 100
+    q = np.asarray(formats.quantize(x, "bf16"))
+    import jax.numpy as jnp
+
+    want = np.asarray(jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(q, want)
+
+
+def test_truncate_mantissa():
+    x = np.float32(1.0 + 0.5 + 0.25 + 2**-20)
+    t = float(np.asarray(formats.truncate_mantissa(x, 2)))
+    assert t == 1.75
+    assert float(np.asarray(formats.truncate_mantissa(x, 23))) == float(x)
+
+
+def test_quantize_flushes_subnormals_and_keeps_inf():
+    tiny = np.float32(1e-41)  # subnormal in fp16's range mapping
+    q = float(np.asarray(formats.quantize(tiny, "fp16")))
+    assert q == 0.0
+    assert np.isinf(np.asarray(formats.quantize(np.float32(np.inf), "fp16")))
+    assert np.isnan(np.asarray(formats.quantize(np.float32(np.nan), "fp16")))

@@ -1,0 +1,73 @@
+import numpy as np
+import pytest
+
+from repro.core import metrics, ppa
+
+
+def test_metrics_basic():
+    exact = np.array([1.0, 2.0, -4.0, 0.0])
+    approx = np.array([1.1, 2.0, -4.0, 0.5])
+    assert metrics.mred(approx, exact) == pytest.approx(0.1 / 3)
+    assert metrics.nmed(approx, exact) == pytest.approx((0.1 + 0.5) / 4 / 4.0)
+    assert metrics.psnr(exact, exact) == float("inf")
+    assert metrics.psnr(np.zeros(4), np.ones(4), peak=1.0) == pytest.approx(0.0)
+    assert metrics.max_red(approx, exact) == pytest.approx(0.1)
+
+
+def test_topk():
+    logits = np.array([[0.1, 0.5, 0.4], [0.9, 0.05, 0.05]])
+    labels = np.array([1, 2])
+    assert metrics.top_k_accuracy(logits, labels, k=1) == pytest.approx(0.5)
+    assert metrics.top_k_accuracy(logits, labels, k=3) == pytest.approx(1.0)
+
+
+def test_ppa_anchors_exact():
+    e = ppa.estimate("exact", name="Exact")
+    a5 = ppa.estimate("ac", name="AC5-5", n=5)
+    assert e.logic_area_um2 == pytest.approx(6268.0)
+    assert e.power_w == pytest.approx(2.32e-3)
+    assert a5.logic_area_um2 == pytest.approx(2156.0)
+    assert a5.power_w == pytest.approx(7.72e-4)
+
+
+def test_ppa_predictions_within_band():
+    """Cost model must predict every published row within 25% (it is
+    calibrated on only 2 of the 15 rows)."""
+    for name, (kind, kw) in ppa.TABLE2_SPECS.items():
+        est = ppa.estimate(kind, name=name, **kw)
+        area, power = ppa.PAPER_TABLE2_64x32[name]
+        assert abs(est.logic_area_um2 - area) / area < 0.25, (name, est.logic_area_um2, area)
+        assert abs(est.power_w - power) / power < 0.25, (name, est.power_w, power)
+
+
+def test_ppa_headline_claims():
+    """Abstract: 'up to 69% logic area reduction and 72% power savings'
+    for the AC designs; ACL5 hits 78%/82% (§IV-A)."""
+    e = ppa.estimate("exact")
+    acl5 = ppa.estimate("acl", n=5)
+    ac44 = ppa.estimate("ac", n=4)
+    area_red_acl5 = 1 - acl5.logic_area_um2 / e.logic_area_um2
+    pow_red_acl5 = 1 - acl5.power_w / e.power_w
+    assert area_red_acl5 > 0.72
+    assert pow_red_acl5 > 0.72
+    # AC4-4 achieves the paper's headline ~69%/72% band
+    assert 1 - ac44.logic_area_um2 / e.logic_area_um2 > 0.60
+    assert 1 - ac44.power_w / e.power_w > 0.65
+
+
+def test_ppa_monotonic_in_n():
+    areas = [ppa.estimate("ac", n=n).logic_area_um2 for n in (3, 4, 5, 6, 7)]
+    assert all(a < b for a, b in zip(areas, areas[1:]))
+
+
+def test_bd_omission_claim():
+    """Paper: omitting BD saves ~6.8% area / ~12.6% power. Cost model should
+    land in the same regime (a few to ~15 percent)."""
+    darea, dpow = ppa.bd_omission_savings(5)
+    assert 0.03 < darea < 0.18
+    assert 0.05 < dpow < 0.20
+
+
+def test_delay_is_sram_dominated():
+    for sram, delay in ppa.SRAM_DELAY_NS.items():
+        assert ppa.estimate("ac", n=5, sram=sram).delay_ns == delay

@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.afpm import AFPMConfig
+from repro.kernels import ops, ref
+from repro.kernels.afpm_bitwise import afpm_bitwise_pallas
+from repro.kernels.afpm_matmul import afpm_matmul_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+# ---------------------------------------------------------------------------
+# afpm_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 16, 8), (128, 256, 128), (100, 130, 50), (256, 512, 384)])
+@pytest.mark.parametrize("passes", [1, 2, 3])
+def test_afpm_matmul_matches_ref(shape, passes):
+    M, K, N = shape
+    rng = np.random.default_rng(hash((M, K, N, passes)) % 2**31)
+    x = rng.standard_normal((M, K)).astype(np.float32)
+    w = rng.standard_normal((K, N)).astype(np.float32)
+    got = afpm_matmul_pallas(jnp.asarray(x), jnp.asarray(w), passes,
+                             bm=64, bn=64, bk=64, interpret=True)
+    want = ref.afpm_matmul_ref(jnp.asarray(x), jnp.asarray(w), passes)
+    # blocked accumulation reorders fp32 adds vs the single-dot oracle
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_afpm_matmul_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 96)), dtype)
+    w = jnp.asarray(rng.standard_normal((96, 64)), dtype)
+    got = afpm_matmul_pallas(x, w, 3, bm=32, bn=32, bk=32, interpret=True)
+    want = ref.afpm_matmul_ref(x.astype(jnp.float32), w.astype(jnp.float32), 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_afpm_matmul_accuracy_ladder():
+    """More passes -> closer to the exact fp32 product (the accuracy knob)."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((128, 256)).astype(np.float32)
+    w = rng.standard_normal((256, 64)).astype(np.float32)
+    exact = x.astype(np.float64) @ w.astype(np.float64)
+    errs = []
+    for p in (1, 2, 3):
+        got = np.asarray(afpm_matmul_pallas(jnp.asarray(x), jnp.asarray(w), p,
+                                            bm=64, bn=64, bk=64, interpret=True))
+        errs.append(np.abs(got - exact).mean())
+    assert errs[0] > errs[1] > errs[2], errs
+    # 3-pass split-float keeps ~16 significand bits per operand
+    rel = np.abs(errs[2]) / np.abs(exact).mean()
+    assert rel < 5e-4
+
+
+def test_afpm_matmul_ops_wrapper_batch_dims():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((2, 5, 48)).astype(np.float32)
+    w = rng.standard_normal((48, 32)).astype(np.float32)
+    got = ops.afpm_matmul(jnp.asarray(x), jnp.asarray(w), 3, force="xla")
+    want = ref.afpm_matmul_ref(jnp.asarray(x), jnp.asarray(w), 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_afpm_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        afpm_matmul_pallas(jnp.zeros((4, 8)), jnp.zeros((9, 4)))
+    with pytest.raises(ValueError):
+        afpm_matmul_pallas(jnp.zeros((4, 8, 2)), jnp.zeros((2, 4)))
+
+
+# ---------------------------------------------------------------------------
+# afpm_bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64,), (33, 77), (4, 130, 19)])
+@pytest.mark.parametrize("cfg", [AFPMConfig(n=4), AFPMConfig(n=5), AFPMConfig(n=6),
+                                 AFPMConfig(n=5, mode="acl")])
+def test_afpm_bitwise_matches_ref(shape, cfg):
+    rng = np.random.default_rng(hash((shape, cfg.n, cfg.mode)) % 2**31)
+    x = rng.standard_normal(shape).astype(np.float32) * 4
+    y = rng.standard_normal(shape).astype(np.float32) * 4
+    got = afpm_bitwise_pallas(jnp.asarray(x), jnp.asarray(y), cfg,
+                              block=(32, 64), interpret=True)
+    want = ref.afpm_bitwise_ref(jnp.asarray(x), jnp.asarray(y), cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_afpm_bitwise_ops_wrapper():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((100,)).astype(np.float32)
+    y = rng.standard_normal((100,)).astype(np.float32)
+    got = ops.afpm_multiply(jnp.asarray(x), jnp.asarray(y), AFPMConfig(n=5), force="xla")
+    want = ref.afpm_bitwise_ref(jnp.asarray(x), jnp.asarray(y), AFPMConfig(n=5))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [
+    # (L, H, P, N, chunk)
+    (64, 2, 16, 8, 16),
+    (128, 1, 32, 16, 32),
+    (96, 3, 8, 4, 32),
+])
+def test_ssd_scan_matches_ref(dims):
+    L, H, P, N, chunk = dims
+    rng = np.random.default_rng(hash(dims) % 2**31)
+    x = rng.standard_normal((L, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, (L, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, (H,)).astype(np.float32)
+    B = rng.standard_normal((L, N)).astype(np.float32)
+    C = rng.standard_normal((L, N)).astype(np.float32)
+    got = ssd_scan_pallas(*map(jnp.asarray, (x, dt, A, B, C)), chunk=chunk, interpret=True)
+    want = ref.ssd_scan_ref(*map(jnp.asarray, (x, dt, A, B, C)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Chunk size is a tiling choice — results must not depend on it."""
+    rng = np.random.default_rng(4)
+    L, H, P, N = 128, 2, 8, 4
+    x = rng.standard_normal((L, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, (L, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, (H,)).astype(np.float32)
+    B = rng.standard_normal((L, N)).astype(np.float32)
+    C = rng.standard_normal((L, N)).astype(np.float32)
+    outs = [
+        np.asarray(ssd_scan_pallas(*map(jnp.asarray, (x, dt, A, B, C)), chunk=c, interpret=True))
+        for c in (16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_state_decay_property():
+    """With strongly negative A the state forgets: doubling early input
+    must not change late outputs materially."""
+    rng = np.random.default_rng(5)
+    L, H, P, N = 64, 1, 4, 4
+    x = rng.standard_normal((L, H, P)).astype(np.float32)
+    dt = np.full((L, H), 0.5, np.float32)
+    A = np.array([-8.0], np.float32)
+    B = rng.standard_normal((L, N)).astype(np.float32)
+    C = rng.standard_normal((L, N)).astype(np.float32)
+    y1 = np.asarray(ref.ssd_scan_ref(*map(jnp.asarray, (x, dt, A, B, C))))
+    x2 = x.copy()
+    x2[:4] *= 2
+    y2 = np.asarray(ref.ssd_scan_ref(*map(jnp.asarray, (x2, dt, A, B, C))))
+    np.testing.assert_allclose(y1[-8:], y2[-8:], rtol=1e-3, atol=1e-3)
+    assert not np.allclose(y1[:4], y2[:4])

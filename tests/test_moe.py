@@ -1,0 +1,115 @@
+"""MoE dispatch correctness: vs dense reference, capacity, shared experts."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.numerics import NumericsConfig
+from repro.models import moe as moe_mod
+from repro.models.layers import unzip
+
+NCFG = NumericsConfig(mode="exact", compute_dtype="float32")
+
+
+def _setup(E=4, K=2, T=24, D=16, FF=32, cf=8.0, n_shared=0, seed=0):
+    cfg_arch = get_arch("deepseek-v3-671b").reduced()
+    cfg = dataclasses.replace(
+        cfg_arch, d_model=D, d_ff=FF,
+        moe=dataclasses.replace(cfg_arch.moe, n_experts=E, top_k=K,
+                                capacity_factor=cf, n_shared=n_shared))
+    pp = moe_mod.moe_init(jax.random.PRNGKey(seed), cfg)
+    params, _ = unzip(pp)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, T // 2, D), jnp.float32)
+    return cfg, params, x
+
+
+def _dense_reference(params, x, cfg):
+    """Route every token to its top-k experts WITHOUT capacity limits."""
+    B, S, D = x.shape
+    xt = np.asarray(x, np.float64).reshape(-1, D)
+    router = np.asarray(params["router"], np.float64)
+    logits = xt @ router
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    K = cfg.moe.top_k
+    wi = np.asarray(params["wi"], np.float64)
+    wg = np.asarray(params["wg"], np.float64)
+    wo = np.asarray(params["wo"], np.float64)
+    out = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        top = np.argsort(probs[t])[::-1][:K]
+        gates = probs[t][top]
+        gates = gates / gates.sum()
+        for e, g in zip(top, gates):
+            h = xt[t] @ wi[e]
+            gg = xt[t] @ wg[e]
+            act = h * (gg / (1 + np.exp(-gg)))
+            out[t] += g * (act @ wo[e])
+    return out.reshape(B, S, D)
+
+
+def test_moe_matches_dense_reference():
+    cfg, params, x = _setup()
+    got = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
+    want = _dense_reference(params, x, cfg)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_top1():
+    cfg, params, x = _setup(K=1)
+    got = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
+    want = _dense_reference(params, x, cfg)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_capacity_drops_reduce_output_mass():
+    """With a tiny capacity factor some tokens are dropped (their MoE output
+    is zero) — output L2 must shrink vs generous capacity, never grow."""
+    cfg_hi, params, x = _setup(cf=8.0, T=64)
+    cfg_lo = dataclasses.replace(
+        cfg_hi, moe=dataclasses.replace(cfg_hi.moe, capacity_factor=0.25))
+    hi = np.asarray(moe_mod.moe_apply(params, x, cfg_hi, NCFG))
+    lo = np.asarray(moe_mod.moe_apply(params, x, cfg_lo, NCFG))
+    assert np.linalg.norm(lo) < np.linalg.norm(hi)
+    assert not np.allclose(lo, hi)
+
+
+def test_shared_expert_always_on():
+    cfg, params, x = _setup(n_shared=1)
+    got = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
+    # zeroing the router keeps the shared-expert contribution
+    params0 = dict(params)
+    params0["router"] = jnp.zeros_like(params["router"])
+    got0 = np.asarray(moe_mod.moe_apply(params0, x, cfg, NCFG))
+    from repro.models.layers import mlp_apply
+
+    shared = np.asarray(mlp_apply(params["shared"], x.reshape(-1, x.shape[-1]), NCFG))
+    assert np.abs(shared).sum() > 0
+    # both outputs contain the shared path; routed parts differ
+    assert not np.allclose(got, got0)
+
+
+def test_gates_renormalized():
+    """top-k gates sum to 1 after renormalization: scaling router logits by a
+    constant shift leaves the output invariant."""
+    cfg, params, x = _setup()
+    got1 = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
+    params2 = dict(params)
+    params2["router"] = params["router"] + 3.0  # softmax shift-invariant anyway
+    got2 = np.asarray(moe_mod.moe_apply(params2, x, cfg, NCFG))
+    np.testing.assert_allclose(got1, got2, rtol=1e-5, atol=1e-5)
+
+
+def test_aux_loss_positive_and_uniform_minimum():
+    T, E = 512, 8
+    rng = np.random.default_rng(0)
+    logits_uniform = jnp.zeros((T, E))
+    eidx = jnp.asarray(rng.integers(0, E, (T, 1)))
+    l_u = float(moe_mod.aux_load_balance_loss(logits_uniform, eidx, E))
+    logits_peaked = jnp.asarray(np.eye(E)[rng.integers(0, 2, T)] * 10.0)
+    eidx_peaked = jnp.argmax(logits_peaked, -1, keepdims=True)
+    l_p = float(moe_mod.aux_load_balance_loss(logits_peaked, eidx_peaked, E))
+    assert l_p > l_u * 0.9

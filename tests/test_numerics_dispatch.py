@@ -1,0 +1,72 @@
+"""The numerics dispatch layer (compiler integration) + segmented matmul."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.numerics import (EXACT, NumericsConfig, nmatmul,
+                                 segmented_matmul_xla)
+
+
+RNG = np.random.default_rng(0)
+X = jnp.asarray(RNG.standard_normal((16, 96)), jnp.float32)
+W = jnp.asarray(RNG.standard_normal((96, 24)), jnp.float32)
+REF = np.asarray(X, np.float64) @ np.asarray(W, np.float64)
+
+
+def test_exact_mode():
+    got = np.asarray(nmatmul(X, W, NumericsConfig(mode="exact",
+                                                  compute_dtype="float32")))
+    np.testing.assert_allclose(got, REF, rtol=1e-5, atol=1e-5)
+
+
+def test_exact_bf16_compute_dtype():
+    got = np.asarray(nmatmul(X, W, EXACT))  # bf16 compute, fp32 accum
+    rel = np.abs(got - REF).mean() / np.abs(REF).mean()
+    assert 1e-5 < rel < 2e-2  # bf16-level error
+
+
+@pytest.mark.parametrize("passes,bound", [(1, 0.03), (2, 0.004), (3, 0.002)])
+def test_segmented_accuracy_ladder(passes, bound):
+    got = np.asarray(segmented_matmul_xla(X, W, passes))
+    rel = np.abs(got - REF).mean() / np.abs(REF).mean()
+    assert rel < bound, (passes, rel)
+    if passes > 1:
+        worse = np.asarray(segmented_matmul_xla(X, W, passes - 1))
+        assert np.abs(got - REF).mean() < np.abs(worse - REF).mean()
+
+
+def test_segmented_equals_paper_term_structure():
+    """3-pass = AC + AD + BC with BD omitted: reconstruct by hand."""
+    xh = X.astype(jnp.bfloat16).astype(jnp.float32)
+    xl = (X - xh).astype(jnp.bfloat16).astype(jnp.float32)
+    wh = W.astype(jnp.bfloat16).astype(jnp.float32)
+    wl = (W - wh).astype(jnp.bfloat16).astype(jnp.float32)
+    manual = xh @ wh + xl @ wh + xh @ wl
+    got = np.asarray(segmented_matmul_xla(X, W, 3))
+    np.testing.assert_allclose(got, np.asarray(manual), rtol=2e-3, atol=2e-3)
+
+
+def test_emulated_mode_matches_registry():
+    cfg = NumericsConfig(mode="emulated", multiplier="AC5-5", seg_n=5)
+    got = np.asarray(nmatmul(X, W, cfg))
+    rel = np.abs(got - REF).mean() / np.abs(REF).mean()
+    assert rel < 3e-3
+    # generic registry multiplier path (CSS16)
+    cfg2 = NumericsConfig(mode="emulated", multiplier="CSS16")
+    got2 = np.asarray(nmatmul(X, W, cfg2))
+    rel2 = np.abs(got2 - REF).mean() / np.abs(REF).mean()
+    assert rel2 < 5e-3
+    assert not np.allclose(got, got2)
+
+
+def test_segmented_pallas_wrapper_roundtrip():
+    from repro.kernels import ops
+
+    got = np.asarray(ops.afpm_matmul(X, W, 3, force="xla"))
+    want = np.asarray(segmented_matmul_xla(X, W, 3))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        nmatmul(X, W, NumericsConfig(mode="nope"))

@@ -1,0 +1,241 @@
+"""Substrate tests: data determinism, optimizer, compression, checkpoint,
+fault-tolerance logic, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.data import synthetic
+from repro.distributed import fault, sharding
+from repro.optim import adamw, compression
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_lm_batch_deterministic_and_shardable():
+    cfg = synthetic.DataConfig(vocab=1000, seq_len=64, global_batch=8, seed=3)
+    b1 = synthetic.lm_batch(cfg, step=5)
+    b2 = synthetic.lm_batch(cfg, step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = synthetic.lm_batch(cfg, step=6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # shards are independent slices of the global batch
+    s0 = synthetic.lm_batch(cfg, step=5, shard=0, nshards=2)
+    s1 = synthetic.lm_batch(cfg, step=5, shard=1, nshards=2)
+    assert s0["tokens"].shape[0] == 4
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+
+
+def test_lm_batch_is_learnable_markov():
+    cfg = synthetic.DataConfig(vocab=97, seq_len=128, global_batch=4, seed=0)
+    b = synthetic.lm_batch(cfg, 0)
+    t = b["tokens"].astype(np.int64)
+    pred = (31 * t[:, 1:] + 7 * t[:, :-1]) % cfg.vocab
+    hits = (np.abs((b["targets"][:, 1:] - pred) % cfg.vocab) <= 16).mean()
+    assert hits > 0.99  # residual noise is bounded by 16
+
+
+def test_cifar_like_class_structure():
+    cfg = synthetic.DataConfig(global_batch=64, seed=1)
+    b = synthetic.cifar_like(cfg, 0)
+    assert b["images"].shape == (64, 32, 32, 3)
+    assert np.isfinite(b["images"]).all()
+    assert 0 <= b["labels"].min() and b["labels"].max() < 10
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def _quad_params():
+    return {"w": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.asarray([0.5])}
+
+
+def test_adamw_descends_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0, schedule="constant",
+                            grad_clip=100.0)
+    params = _quad_params()
+    state = adamw.init(params, cfg)
+    loss_fn = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    losses = []
+    for _ in range(200):
+        g = jax.grad(loss_fn)(params)
+        params, state, m = adamw.apply_updates(params, g, state, cfg)
+        losses.append(float(loss_fn(params)))
+    assert losses[-1] < 1e-2 < losses[0]
+
+
+def test_adamw_bf16_moments_close_to_fp32():
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (64,))}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (64,)) * 0.1}
+    out = {}
+    for mdt in ("float32", "bfloat16"):
+        cfg = adamw.AdamWConfig(moment_dtype=mdt, schedule="constant")
+        state = adamw.init(params, cfg)
+        p = params
+        for _ in range(10):
+            p, state, _ = adamw.apply_updates(p, g, state, cfg)
+        out[mdt] = np.asarray(p["w"])
+        assert state.mu["w"].dtype == jnp.dtype(mdt)
+    np.testing.assert_allclose(out["bfloat16"], out["float32"], rtol=0.02, atol=2e-3)
+
+
+def test_grad_clip_and_schedule():
+    g = {"w": jnp.full((4,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.schedule_lr(cfg, jnp.asarray(s))) for s in (0, 5, 10, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3) and lrs[3] < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3
+    q, scale, n = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, scale, n, x.shape)
+    err = np.abs(np.asarray(back - x))
+    # blockwise symmetric int8: error < scale/2 per block
+    assert err.max() < float(scale.max()) * 0.51
+
+
+def test_error_feedback_preserves_sum():
+    """Over many steps, sum of compressed grads ~ sum of true grads (EF)."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(256)
+    sent_sum = np.zeros(256)
+    err = jnp.zeros((256,), jnp.float32)
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal(256) * 0.01, jnp.float32)
+        sent, err = compression.compress_with_feedback(g, err)
+        true_sum += np.asarray(g)
+        sent_sum += np.asarray(sent)
+    np.testing.assert_allclose(sent_sum, true_sum, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)},
+            "s": jnp.asarray(7, jnp.int32)}
+    d = str(tmp_path / "ck")
+    for step in (1, 2, 3, 4, 5):
+        ckpt_io.save(d, step, tree, extra={"loss": 1.0 / step}, keep=3)
+    assert ckpt_io.all_steps(d) == [3, 4, 5]
+    restored, manifest = ckpt_io.restore(d, tree)
+    assert manifest["step"] == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(10))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    assert int(restored["s"]) == 7
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    tree = {"a": jnp.zeros(3)}
+    d = str(tmp_path / "ck")
+    ckpt_io.save(d, 1, tree)
+    # simulate a crash mid-write: .tmp dir without manifest
+    os.makedirs(os.path.join(d, "step_000000002.tmp"))
+    assert ckpt_io.latest_step(d) == 1
+
+
+def test_checkpoint_restore_missing(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt_io.restore(str(tmp_path / "nope"), {"a": jnp.zeros(1)})
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_straggler_watchdog():
+    w = fault.StepWatchdog(threshold=2.0)
+    for step in range(8):
+        for worker in range(8):
+            w.record(worker, 1.0 if worker != 3 else 3.5)
+    assert w.stragglers() == [3]
+
+
+def test_heartbeats():
+    t = [0.0]
+    reg = fault.HeartbeatRegistry(timeout_s=10, clock=lambda: t[0])
+    for wkr in range(4):
+        reg.beat(wkr)
+    t[0] = 5.0
+    reg.beat(0)
+    t[0] = 12.0
+    assert reg.dead() == [1, 2, 3]
+    assert reg.alive() == [0]
+
+
+def test_restart_policy_backoff():
+    p = fault.RestartPolicy(max_restarts=3, backoff_base_s=1.0)
+    delays = [p.next_delay() for _ in range(4)]
+    assert delays == [1.0, 2.0, 4.0, None]
+
+
+def test_elastic_mesh_plan():
+    assert fault.plan_elastic_mesh(512, 16) == (32, 16)
+    assert fault.plan_elastic_mesh(480, 16) == (16, 16)   # 30 -> pow2 16
+    assert fault.plan_elastic_mesh(256, 16) == (16, 16)
+    with pytest.raises(ValueError):
+        fault.plan_elastic_mesh(8, 16)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_spec_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = {"heads": "model", "batch": ("pod", "data"), "embed": None}
+    # 40 heads % 1 == 0 trivially here; emulate a 16-wide axis via fake mesh
+    import numpy as np_
+
+    from jax.sharding import PartitionSpec as P
+    spec = sharding.spec_for(("batch", "heads", "embed"), (8, 40, 64), mesh, rules)
+    assert spec == P("data", "model", None)
+
+
+def test_spec_divisibility_fallback_16():
+    devs = jax.devices() * 1
+    # build a virtual mesh shape via abstract Mesh from mesh_utils is not
+    # possible on 1 CPU; instead validate the arithmetic helper directly
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rules = {"heads": "model", "vocab": "model", "batch": ("pod", "data")}
+    from jax.sharding import PartitionSpec as P
+
+    spec = sharding.spec_for(("batch", "heads", None), (256, 40, 64), FakeMesh, rules)
+    assert spec == P("data", None, None)  # 40 % 16 != 0 -> replicated
+    spec2 = sharding.spec_for(("vocab", None), (51865, 384), FakeMesh, rules)
+    assert spec2 == P(None, None)          # whisper vocab not divisible
+    spec3 = sharding.spec_for(("vocab", None), (256000, 384), FakeMesh, rules)
+    assert spec3 == P("model", None)
+
+
+def test_no_double_axis_use():
+    class FakeMesh:
+        shape = {"data": 4, "model": 4}
+
+    rules = {"a": "model", "b": "model"}
+    from jax.sharding import PartitionSpec as P
+
+    spec = sharding.spec_for(("a", "b"), (8, 8), FakeMesh, rules)
+    assert spec == P("model", None)  # second use of 'model' falls back

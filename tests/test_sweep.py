@@ -1,0 +1,32 @@
+"""Design-space exploration (the OpenACM compiler role)."""
+import pytest
+
+from repro.core import sweep
+
+
+def test_sweep_has_pareto_points():
+    pts = sweep.sweep(n_samples=20_000)
+    assert len(pts) == len(sweep.SWEEPABLE)
+    pareto = [p for p in pts if p.pareto]
+    assert 3 <= len(pareto) <= len(pts)
+    # AC designs should dominate the frontier at mid-accuracy (paper claim)
+    names = {p.name for p in pareto}
+    assert any(n.startswith("AC") for n in names), names
+
+
+def test_recommend_meets_budget_and_is_cheapest():
+    p = sweep.recommend(1e-3, n_samples=20_000)
+    assert p.mred <= 1e-3
+    all_ok = [q for q in sweep.sweep(n_samples=20_000) if q.mred <= 1e-3]
+    assert p.area_um2 == min(q.area_um2 for q in all_ok)
+
+
+def test_recommend_infeasible_raises():
+    with pytest.raises(ValueError):
+        sweep.recommend(1e-12, n_samples=5_000)
+
+
+def test_exact_always_available_fallback():
+    # a loose budget should select the cheapest approximate design (ACL/NC)
+    p = sweep.recommend(0.1, n_samples=20_000)
+    assert p.area_um2 < 2000
