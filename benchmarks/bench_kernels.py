@@ -47,7 +47,7 @@ def run(csv_rows=None):
     xe = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
     ye = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
     for label, cfg in [("AC5-5", AFPMConfig(n=5)), ("ACL5", AFPMConfig(n=5, mode="acl"))]:
-        f = jax.jit(lambda a, b, c=cfg: ops.afpm_multiply(a, b, c, force="xla"))
+        f = jax.jit(lambda a, b, c=cfg: ops.afpm_multiply(a, b, c, backend="xla"))
         us = _time(f, xe, ye)
         rate = (1 << 16) / (us / 1e6) / 1e6
         print(f"{'bitlevel ' + label + ' 65536 elems':28s} {us:10.1f} us "
@@ -61,7 +61,7 @@ def run(csv_rows=None):
     A = jnp.asarray(-rng.uniform(0.5, 2, (H,)), jnp.float32)
     B = jnp.asarray(rng.standard_normal((L, Nst)), jnp.float32)
     C = jnp.asarray(rng.standard_normal((L, Nst)), jnp.float32)
-    f = jax.jit(lambda *a: ops.ssd_scan(*a, force="xla"))
+    f = jax.jit(lambda *a: ops.ssd_scan(*a, backend="xla"))
     us = _time(f, xs, dt, A, B, C)
     print(f"{'ssd_scan 1024x4x32 (chunked)':28s} {us:10.1f} us")
     if csv_rows is not None:

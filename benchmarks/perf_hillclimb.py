@@ -55,7 +55,7 @@ def _bf16_numerics(cfg):
 
     return dataclasses.replace(
         cfg, numerics=NumericsConfig(mode="segmented", seg_passes=3,
-                                     use_pallas=False))
+                                     backend="xla"))
 
 
 def _moe_ep_data(cfg):

@@ -38,8 +38,8 @@ X = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
 W = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
 ref = np.asarray(nmatmul(X, W, NumericsConfig(mode="exact", compute_dtype="float32")))
 for cfg in [NumericsConfig(mode="emulated", multiplier="AC5-5", seg_n=5),
-            NumericsConfig(mode="segmented", seg_passes=3, use_pallas=False),
-            NumericsConfig(mode="segmented", seg_passes=1, use_pallas=False)]:
+            NumericsConfig(mode="segmented", seg_passes=3, backend="xla"),
+            NumericsConfig(mode="segmented", seg_passes=1, backend="xla")]:
     got = np.asarray(nmatmul(X, W, cfg))
     err = np.abs(got - ref).mean() / np.abs(ref).mean()
     label = cfg.multiplier if cfg.mode == "emulated" else f"segmented-{cfg.seg_passes}"

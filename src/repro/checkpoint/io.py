@@ -4,6 +4,12 @@ Layout:  <dir>/step_<N>/shard_<k>.msgpack.zst  + MANIFEST.json (written last
 — its presence marks the checkpoint committed; partial writes are ignored
 at restore, which is the crash-consistency story).
 
+Compression uses ``zstandard`` when installed and falls back to stdlib
+``zlib`` otherwise (the shard filename is codec-independent; restore
+detects the codec from the blob's magic bytes, so checkpoints written
+with either codec restore in either environment — a zstd checkpoint in a
+zlib-only environment raises a clear error).
+
 Elastic re-sharding: arrays are stored UNsharded per-leaf (host gathers its
 addressable shards; in multi-host each host writes its own shard file and
 restore re-slices), so a checkpoint written under mesh A restores under
@@ -15,14 +21,37 @@ import json
 import os
 import shutil
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dependency; zlib fallback below
+    zstandard = None
 
 _CODEC_VERSION = 1
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint shard is zstd-compressed but the 'zstandard' "
+                "package is not installed; pip install zstandard to restore it"
+            )
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _encode_leaf(x):
@@ -53,8 +82,7 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
         "version": _CODEC_VERSION,
         "leaves": [_encode_leaf(jax.device_get(l)) for l in leaves],
     }
-    cctx = zstandard.ZstdCompressor(level=3)
-    blob = cctx.compress(msgpack.packb(payload, use_bin_type=True))
+    blob = _compress(msgpack.packb(payload, use_bin_type=True))
     with open(os.path.join(tmp_dir, f"shard_{pidx}.msgpack.zst"), "wb") as f:
         f.write(blob)
 
@@ -104,9 +132,8 @@ def restore(ckpt_dir: str, tree_like, step: int | None = None,
     step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
     with open(os.path.join(step_dir, "MANIFEST.json")) as f:
         manifest = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
     with open(os.path.join(step_dir, f"shard_{pidx}.msgpack.zst"), "rb") as f:
-        payload = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+        payload = msgpack.unpackb(_decompress(f.read()), raw=False)
     if payload["version"] != _CODEC_VERSION:
         raise ValueError(f"codec version mismatch: {payload['version']}")
     leaves = [_decode_leaf(d) for d in payload["leaves"]]

@@ -17,8 +17,14 @@ Modes
     TPU-native analogue: split-float (hi/lo bf16) matmul with term
     skipping; ``seg_passes`` = 1 (ACL-like), 2, or 3 (AC-n-n-like) MXU
     passes, exact = 6-pass HIGHEST.  Scales to the full model zoo and is
-    what the multi-pod dry-run/roofline paths use.  Backed by the Pallas
-    kernel in ``repro.kernels`` with an XLA fallback.
+    what the multi-pod dry-run/roofline paths use.  Backed by the kernel
+    substrate (``repro.kernels.dispatch``), selected by ``backend``:
+
+    ``auto``       Pallas on TPU, XLA reference elsewhere (default)
+    ``pallas``     force the native Pallas lowering (TPU)
+    ``interpret``  Pallas kernel body in interpreter mode (any backend;
+                   what tests use to validate the kernels on CPU)
+    ``xla``        force the pure-jnp reference implementation
 """
 from __future__ import annotations
 
@@ -29,7 +35,12 @@ import jax
 import jax.numpy as jnp
 
 from .afpm import AFPMConfig, afpm_matmul_emulated
-from .registry import get_multiplier
+from .registry import get_elementwise, get_multiplier
+
+# single source of truth for kernel backends; kernels/dispatch.py imports
+# this (that direction is cycle-safe, the reverse is not: EXACT below is
+# constructed while this module loads)
+BACKENDS = ("auto", "pallas", "interpret", "xla")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,9 +49,14 @@ class NumericsConfig:
     multiplier: str = "AC5-5"       # registry name, for emulated mode
     seg_passes: int = 3             # segmented mode: 1=ACL-like, 3=AC-like
     seg_n: int = 5                  # segment width for emulated AC modes
-    use_pallas: bool = True         # segmented mode: Pallas kernel vs XLA fallback
+    backend: str = "auto"           # kernel backend: auto|pallas|interpret|xla
     compute_dtype: str = "bfloat16" # exact-mode matmul dtype for big models
     accum_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}")
 
     def afpm(self) -> AFPMConfig:
         mode = "acl" if self.multiplier.lower().startswith("acl") else "ac"
@@ -50,37 +66,19 @@ class NumericsConfig:
 EXACT = NumericsConfig(mode="exact")
 
 
-def _split_hi_lo(x: jax.Array):
-    """fp32 -> (hi, lo) bf16 pair: the MXU image of mantissa segmentation.
-
-    hi carries the top 8 significand bits (hidden + 7 = the "A" segment),
-    lo = bf16(x - hi) carries the next ~8 ("B" segment).
-    """
-    x = jnp.asarray(x, jnp.float32)
-    hi = x.astype(jnp.bfloat16)
-    lo = (x - hi.astype(jnp.float32)).astype(jnp.bfloat16)
-    return hi, lo
-
-
 def segmented_matmul_xla(x, w, passes: int = 3):
-    """Split-float approximate matmul (XLA fallback; oracle for the kernel).
+    """Split-float approximate matmul (XLA reference; oracle for the kernel).
 
     passes=3: hi*hi + hi*lo + lo*hi  (AC + AD + BC; BD omitted, paper Eq. 6)
     passes=2: hi*hi + hi*lo          (asymmetric: activations low bits kept)
     passes=1: hi*hi                  (ACL-like single high-segment product)
+
+    Thin alias of ``repro.kernels.ref.afpm_matmul_ref`` — the single XLA
+    reference implementation, also what the substrate's xla backend runs.
     """
-    xh, xl = _split_hi_lo(x)
-    wh, wl = _split_hi_lo(w)
-    dot = lambda a, b: jax.lax.dot_general(
-        a, b, (((a.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    out = dot(xh, wh)
-    if passes >= 2:
-        out = out + dot(xl, wh)
-    if passes >= 3:
-        out = out + dot(xh, wl)
-    return out
+    from repro.kernels import ref  # lazy: kernels import core
+
+    return ref.afpm_matmul_ref(x, w, passes)
 
 
 def nmatmul(x: jax.Array, w: jax.Array, cfg: Optional[NumericsConfig] = None):
@@ -100,11 +98,9 @@ def nmatmul(x: jax.Array, w: jax.Array, cfg: Optional[NumericsConfig] = None):
         mult = get_multiplier(cfg.multiplier)
         return _generic_emulated_matmul(x, w, mult)
     if cfg.mode == "segmented":
-        if cfg.use_pallas:
-            from repro.kernels import ops  # lazy: kernels import core
+        from repro.kernels import dispatch  # lazy: kernels import core
 
-            return ops.afpm_matmul(x, w, passes=cfg.seg_passes)
-        return segmented_matmul_xla(x, w, cfg.seg_passes)
+        return dispatch.matmul(x, w, cfg.seg_passes, backend=cfg.backend)
     raise ValueError(f"unknown numerics mode {cfg.mode!r}")
 
 
@@ -129,6 +125,10 @@ def _generic_emulated_matmul(x, w, mult, k_chunk: int = 64):
     return out
 
 
-def apply_elementwise(x, y, multiplier: str):
-    """Elementwise product under a named multiplier (image-processing path)."""
-    return get_multiplier(multiplier)(x, y)
+def apply_elementwise(x, y, multiplier: str, backend: str = "auto"):
+    """Elementwise product under a named multiplier (image-processing path).
+
+    AFPM-family multipliers route through the kernel substrate (Pallas on
+    TPU); everything else runs the registered pure-jnp function.
+    """
+    return get_elementwise(multiplier, backend=backend)(x, y)

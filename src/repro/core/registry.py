@@ -4,6 +4,11 @@ OpenACM exposes approximate operators as named library entries that the
 compiler instantiates per layer.  We mirror that: every multiplier design
 (exact, AC-n-n, ACL-n, MMBS-k, CSS-m, NC/LPC/HPC) is registered under the
 paper's label and resolvable by name from model/benchmark configs.
+
+AFPM-family entries additionally record their :class:`AFPMConfig`, so
+:func:`get_elementwise` can route them through the kernel substrate
+(``repro.kernels.dispatch``) — one audited entry point whether the caller
+wants the pure-jnp datapath, the Pallas VPU kernel, or its interpreter.
 """
 from __future__ import annotations
 
@@ -17,10 +22,14 @@ from .exact_mult import exact_mult_f32
 MultFn = Callable[[jax.Array, jax.Array], jax.Array]
 
 _REGISTRY: Dict[str, MultFn] = {}
+_AFPM_CONFIGS: Dict[str, afpm.AFPMConfig] = {}
 
 
-def register(name: str, fn: MultFn) -> None:
+def register(name: str, fn: MultFn,
+             afpm_cfg: afpm.AFPMConfig | None = None) -> None:
     _REGISTRY[name.lower()] = fn
+    if afpm_cfg is not None:
+        _AFPM_CONFIGS[name.lower()] = afpm_cfg
 
 
 def get_multiplier(name: str) -> MultFn:
@@ -36,18 +45,33 @@ def available() -> list[str]:
     return sorted(_REGISTRY)
 
 
+def get_elementwise(name: str, backend: str = "auto") -> MultFn:
+    """Backend-aware elementwise multiplier.
+
+    AFPM-family names (AC-n-n / ACL-n / AC-<fmt>) dispatch through the
+    kernel substrate under ``backend``; other designs have no kernel and
+    fall back to their registered pure-jnp implementation.
+    """
+    cfg = _AFPM_CONFIGS.get(name.lower())
+    if cfg is None:
+        return get_multiplier(name)
+    from repro.kernels import dispatch  # lazy: kernels import core
+
+    return lambda x, y: dispatch.multiply(x, y, cfg, backend=backend)
+
+
 def _register_defaults() -> None:
     register("exact", exact_mult_f32)
     for n in (3, 4, 5, 6, 7):
         cfg = afpm.AFPMConfig(n=n, mode="ac")
-        register(f"AC{n}-{n}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c))
+        register(f"AC{n}-{n}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c), cfg)
     for n in (4, 5, 6, 8):
         cfg = afpm.AFPMConfig(n=n, mode="acl")
-        register(f"ACL{n}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c))
+        register(f"ACL{n}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c), cfg)
     # narrower storage formats (paper: FP16..FP32 supported by the framework)
     for fmtname, nmax in (("fp16", 5), ("afp24", 7), ("bf16", 3)):
         cfg = afpm.AFPMConfig(n=min(nmax, 5), mode="ac", fmt=fmtname)
-        register(f"AC-{fmtname}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c))
+        register(f"AC-{fmtname}", lambda x, y, c=cfg: afpm.afpm_mult_f32(x, y, c), cfg)
     for k in (5, 6, 7):
         cfg = baselines.MMBSConfig(k=k)
         register(f"MMBS{k}", lambda x, y, c=cfg: baselines.mmbs_mult_f32(x, y, c))

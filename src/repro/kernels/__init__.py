@@ -1,14 +1,24 @@
-"""Pallas TPU kernels for the compute hot-spots.
+"""Kernel substrate: Pallas TPU kernels + portable backend dispatch.
 
   afpm_matmul  — segmented (split-float) approximate matmul on the MXU;
                  the TPU-native image of the paper's mantissa segmentation
   afpm_bitwise — bit-level AFPM datapath on the VPU (paper-faithful)
   ssd_scan     — Mamba2 SSD chunked scan (mamba2/zamba2 architectures)
 
-Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
-in ``ops.py`` (TPU -> Pallas, CPU -> XLA reference; tests run the kernels
-in interpret mode).
-"""
-from . import ops, ref
+Layering:
 
-__all__ = ["ops", "ref"]
+  compat.py    — JAX-version shim (CompilerParams / BlockSpec drift);
+                 the only place allowed to touch ``pltpu.*CompilerParams``
+  dispatch.py  — backend resolution (auto | pallas | interpret | xla) and
+                 per-kernel block-size tuning tables keyed on
+                 (backend, shape bucket); the audited entry points
+  ref.py       — pure-jnp oracles defining each kernel's exact semantics
+  ops.py       — jit'd public wrappers the model zoo calls
+
+Tests validate the kernel bodies in ``interpret`` mode on CPU and pin
+them against ``ref.py``; ``NumericsConfig.backend`` selects the backend
+end-to-end.
+"""
+from . import compat, dispatch, ops, ref
+
+__all__ = ["compat", "dispatch", "ops", "ref"]

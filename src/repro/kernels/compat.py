@@ -1,0 +1,75 @@
+"""JAX-version compatibility shim for the Pallas TPU kernels.
+
+The Pallas API has drifted across JAX releases in ways that break kernel
+construction (not just execution):
+
+* ``pltpu.CompilerParams`` is the current spelling of the TPU compiler
+  parameter struct; older releases (including the pinned 0.4.x line) call
+  it ``pltpu.TPUCompilerParams``, and very old ones take a raw
+  ``mosaic=...`` dict.
+* ``pl.BlockSpec`` swapped its positional argument order from
+  ``(index_map, block_shape)`` to ``(block_shape, index_map)``.
+
+Every kernel in this package goes through this module instead of touching
+``pltpu.*CompilerParams`` / positional ``pl.BlockSpec`` directly, so a JAX
+upgrade is a one-file change.  ``kernels/dispatch.py`` builds on top of
+this for backend selection; nothing outside ``repro.kernels`` should need
+to import this module.
+"""
+from __future__ import annotations
+
+import inspect
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# -- CompilerParams ---------------------------------------------------------
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+
+def tpu_compiler_params(*, dimension_semantics=None, **kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``.
+
+    Accepts the modern keyword surface (``dimension_semantics`` plus any
+    extra fields the resolved class supports) and returns whatever this
+    JAX version expects for ``compiler_params=``.
+    """
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    if _COMPILER_PARAMS_CLS is None:  # pre-dataclass JAX: raw mosaic dict
+        return {"mosaic": kwargs}
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+# -- BlockSpec argument order -----------------------------------------------
+
+def _blockspec_block_shape_first() -> bool:
+    try:
+        params = [
+            p for p in inspect.signature(pl.BlockSpec.__init__).parameters
+            if p not in ("self",)
+        ]
+        return params[0] == "block_shape"
+    except (TypeError, ValueError, IndexError):  # builtins / exotic sigs
+        return True
+
+
+_BLOCK_SHAPE_FIRST = _blockspec_block_shape_first()
+
+
+def block_spec(block_shape, index_map=None, **kwargs):
+    """``pl.BlockSpec`` with the (block_shape, index_map) order regardless
+    of which order the installed JAX uses positionally."""
+    if _BLOCK_SHAPE_FIRST:
+        return pl.BlockSpec(block_shape, index_map, **kwargs)
+    return pl.BlockSpec(index_map, block_shape, **kwargs)
+
+
+# -- VMEM scratch -----------------------------------------------------------
+
+def vmem(shape, dtype):
+    """VMEM scratch allocation for ``scratch_shapes=``."""
+    return pltpu.VMEM(tuple(shape), dtype)

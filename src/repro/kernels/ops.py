@@ -1,72 +1,57 @@
-"""Jit'd public wrappers for the Pallas kernels, with backend dispatch.
+"""Jit'd public wrappers for the Pallas kernels.
 
-On TPU the Pallas kernels run natively; on CPU the wrappers route to the
-mathematically-identical XLA reference (``ref.py``) so that large-model
-paths stay fast, while tests exercise the kernels in ``interpret=True``
-mode to validate the kernel bodies themselves.
+Thin jit shells over the substrate's audited entry points in
+``dispatch.py``: backend selection (``auto | pallas | interpret | xla``)
+and block-size tuning live there; this module only pins the jit/static
+argument surface the model zoo and benchmarks call.
+
+The legacy ``force=``/``interpret=`` knobs from the pre-substrate API are
+still accepted (``force="xla"`` == ``backend="xla"``, ``force="pallas",
+interpret=True`` == ``backend="interpret"``) so existing call sites and
+tests keep working; new code should pass ``backend=`` — typically straight
+from ``NumericsConfig.backend``.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.afpm import AFPMConfig
 
-from . import ref
-from .afpm_bitwise import afpm_bitwise_pallas
-from .afpm_matmul import afpm_matmul_pallas
-from .ssd_scan import ssd_scan_pallas
+from . import dispatch
 
 
-def _use_pallas(force: str | None) -> bool:
-    if force == "pallas":
-        return True
-    if force == "xla":
-        return False
-    return jax.default_backend() == "tpu"
+@functools.partial(jax.jit,
+                   static_argnames=("passes", "backend", "force", "interpret"))
+def afpm_matmul(x, w, passes: int = 3, *, backend: str = "auto",
+                force: str | None = None, interpret: bool = False):
+    """Segmented approximate matmul; batch dims on ``x`` run natively in
+    the Pallas grid (no reshape-flattening)."""
+    be = dispatch.resolve_backend(backend, force=force, interpret=interpret)
+    return dispatch.matmul(x, w, passes, backend=be)
 
 
-@functools.partial(jax.jit, static_argnames=("passes", "force", "interpret"))
-def afpm_matmul(x, w, passes: int = 3, *, force: str | None = None, interpret: bool = False):
-    """Segmented approximate matmul; batch dims on ``x`` are flattened."""
-    if not _use_pallas(force):
-        return ref.afpm_matmul_ref(x, w, passes)
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    out = afpm_matmul_pallas(x2, w, passes, interpret=interpret)
-    return out.reshape(*lead, w.shape[-1])
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "force", "interpret"))
-def afpm_multiply(x, y, cfg: AFPMConfig = AFPMConfig(), *, force: str | None = None,
-                  interpret: bool = False):
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "backend", "force", "interpret"))
+def afpm_multiply(x, y, cfg: AFPMConfig = AFPMConfig(), *, backend: str = "auto",
+                  force: str | None = None, interpret: bool = False):
     """Elementwise bit-level AFPM multiply."""
-    if not _use_pallas(force):
-        return ref.afpm_bitwise_ref(x, y, cfg)
-    return afpm_bitwise_pallas(x, y, cfg, interpret=interpret)
+    be = dispatch.resolve_backend(backend, force=force, interpret=interpret)
+    return dispatch.multiply(x, y, cfg, backend=be)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "force", "interpret"))
-def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, force: str | None = None,
-             interpret: bool = False):
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "backend", "force", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int | None = None, backend: str = "auto",
+             force: str | None = None, interpret: bool = False):
     """Chunked Mamba2 SSD scan: (L,H,P),(L,H),(H,),(L,N),(L,N) -> (L,H,P).
 
-    CPU/XLA path uses the chunked jnp implementation (same FLOP structure
-    as the kernel) so dry-run cost analysis reflects the real algorithm.
+    ``chunk=None`` takes the substrate's tuned chunk for the resolved
+    backend; arbitrary sequence lengths are handled (dispatch pads with
+    exact dt=0 steps).  The xla backend uses the chunked jnp
+    implementation (same FLOP structure as the kernel) so dry-run cost
+    analysis reflects the real algorithm.
     """
-    L = x.shape[0]
-    Q = min(chunk, L)
-    pad = (-L) % Q
-    if pad:
-        # dt=0 padding is exact: zero decay increment and zero input weight
-        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
-        dt = jnp.pad(dt, ((0, pad), (0, 0)))
-        B = jnp.pad(B, ((0, pad), (0, 0)))
-        C = jnp.pad(C, ((0, pad), (0, 0)))
-    if not _use_pallas(force):
-        out = ref.ssd_scan_chunked_ref(x, dt, A, B, C, chunk=Q)
-    else:
-        out = ssd_scan_pallas(x, dt, A, B, C, chunk=Q, interpret=interpret)
-    return out[:L] if pad else out
+    be = dispatch.resolve_backend(backend, force=force, interpret=interpret)
+    return dispatch.ssd(x, dt, A, B, C, chunk=chunk, backend=be)

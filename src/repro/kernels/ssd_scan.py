@@ -23,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
 
 DEFAULT_CHUNK = 128
 
@@ -94,17 +95,17 @@ def ssd_scan_pallas(
         functools.partial(_kernel, nc=nc),
         grid=(H, nc),
         in_specs=[
-            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
-            pl.BlockSpec((1, Q), lambda h, c: (h, c)),
-            pl.BlockSpec((1, 1), lambda h, c: (h, 0)),
-            pl.BlockSpec((Q, N), lambda h, c: (c, 0)),
-            pl.BlockSpec((Q, N), lambda h, c: (c, 0)),
+            compat.block_spec((1, Q, P), lambda h, c: (h, c, 0)),
+            compat.block_spec((1, Q), lambda h, c: (h, c)),
+            compat.block_spec((1, 1), lambda h, c: (h, 0)),
+            compat.block_spec((Q, N), lambda h, c: (c, 0)),
+            compat.block_spec((Q, N), lambda h, c: (c, 0)),
         ],
-        out_specs=pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+        out_specs=compat.block_spec((1, Q, P), lambda h, c: (h, c, 0)),
         out_shape=jax.ShapeDtypeStruct((H, L, P), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        scratch_shapes=[compat.vmem((N, P), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(xh, dth, Ah, B, C)

@@ -28,7 +28,7 @@ def serve(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
     if numerics != "exact":
         passes = {"segmented3": 3, "segmented2": 2, "segmented1": 1}[numerics]
         cfg = dataclasses.replace(cfg, numerics=NumericsConfig(
-            mode="segmented", seg_passes=passes, use_pallas=False))
+            mode="segmented", seg_passes=passes, backend="xla"))
     if params is None:
         pp = transformer.init(cfg, jax.random.PRNGKey(seed))
         params, _ = unzip(pp)

@@ -95,7 +95,8 @@ def ssm_apply(params, x, cfg, ncfg: NumericsConfig, cache=None, want_state=False
         xs, conv_tail = _causal_conv(xs, params["conv_w"], params["conv_b"])
         xh = xs.reshape(B_, S, H, P)
         y = jax.vmap(
-            lambda xb, db, Bb, Cb: ops.ssd_scan(xb, db, A, Bb, Cb, chunk=s.chunk)
+            lambda xb, db, Bb, Cb: ops.ssd_scan(xb, db, A, Bb, Cb, chunk=s.chunk,
+                                                backend=ncfg.backend)
         )(xh, dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32))
         new_cache = None
         if want_state:

@@ -279,6 +279,11 @@ def logits_fn(params, cfg, hidden):
         (((hidden.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+    if cfg.tie_embeddings:
+        # the tied table has unit-variance rows (embed_init scale=1.0), so
+        # match the untied head's d**-0.5 init: logits start at unit scale
+        # instead of sqrt(d_model) (which stalls early training)
+        logits = logits * (cfg.d_model ** -0.5)
     logits = logical_constraint(logits, ("batch", "seq", "vocab"))
     return softcap(logits, cfg.logit_softcap)
 

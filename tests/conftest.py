@@ -1,0 +1,24 @@
+"""Shared fixtures for the test suite.
+
+The ``slow`` marker (declared in pyproject.toml, deselected by default via
+``addopts``) keeps the default run — the tier-1 command — under ~2
+minutes; ``pytest -m ""`` runs everything.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng(request):
+    """Deterministic per-test Generator: seeded from the test's node id, so
+    every test (and every parametrization) gets an independent, stable
+    stream without hand-picked seed constants."""
+    return np.random.default_rng(zlib.crc32(request.node.nodeid.encode()))
+
+
+@pytest.fixture
+def seeded_rng():
+    """One fixed stream for tests that want cross-test reproducibility."""
+    return np.random.default_rng(0)

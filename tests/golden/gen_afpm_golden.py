@@ -1,0 +1,184 @@
+"""Golden-vector generator for the AFPM datapath.
+
+A pure-Python, integer-only reimplementation of the paper's AC-n-n / ACL-n
+multiplier (repro/core/afpm.py §III-B), deliberately sharing NO code with
+the JAX datapath: plain ints, one scalar at a time.  The JAX implementation
+is pinned bit-for-bit against the vectors this script emits.
+
+Run from the repo root to regenerate ``tests/golden/afpm_golden.json``:
+
+    python tests/golden/gen_afpm_golden.py
+
+Inputs are uint32 bit patterns: IEEE-754 specials (zeros, infs, nans,
+subnormals, extreme normals) plus a fixed-PRNG sweep of the full pattern
+space, so the exception paths are exercised, not just the happy path.
+NaN results are stored as the canonical quiet-NaN pattern 0x7FC00000; the
+consuming test treats any-NaN-vs-any-NaN as equal (payloads are
+unspecified), everything else must match exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+
+F32 = {"man_bits": 23, "exp_bits": 8}
+BF16 = {"man_bits": 7, "exp_bits": 8}
+FORMATS = {"fp32": F32, "bf16": BF16}
+
+_CANON_NAN = 0x7FC00000
+_INF = 0x7F800000
+
+
+def _fmt_params(fmt):
+    bias = (1 << (fmt["exp_bits"] - 1)) - 1
+    max_exp_field = (1 << fmt["exp_bits"]) - 1
+    return fmt["man_bits"], bias, max_exp_field
+
+
+def decode(bits: int, fmt) -> tuple[int, int, int]:
+    """uint32 carrier -> (sign, biased exp field, fmt-width mantissa field)."""
+    man_bits, bias, max_exp_field = _fmt_params(fmt)
+    man32 = bits & ((1 << 23) - 1)
+    exp32 = (bits >> 23) & 0xFF
+    sign = bits >> 31
+    if man_bits == 23 and fmt["exp_bits"] == 8:
+        return sign, exp32, man32
+    man = man32 >> (23 - man_bits)
+    e_unb = exp32 - 127
+    exp = min(max(e_unb + bias, 0), max_exp_field)
+    if exp == 0 or exp == max_exp_field:  # flushed subnormal / saturated
+        man = 0
+    if exp32 == 255:  # preserve inf/nan class from the fp32 carrier
+        exp = max_exp_field
+        if man32 != 0:
+            man = 1
+    return sign, exp, man
+
+
+def ac_cross(mx: int, my: int, n: int, M: int) -> int:
+    """Approximate cross term Mx*My in units of 2^-3n (paper Eqs. 5-6,
+    with conditional execution and shift compensation enabled)."""
+    lo_shift = max(M - 2 * n, 0)
+    A = mx >> (M - n)
+    B = (mx >> lo_shift) & ((1 << n) - 1)
+    C = my >> (M - n)
+    D = (my >> lo_shift) & ((1 << n) - 1)
+
+    force_ad = C == 0 and A != 0 and D != 0
+    force_bc = A == 0 and C != 0 and B != 0
+    exec_ad = (D >> 2) != 0 or force_ad
+    exec_bc = (B >> 2) != 0 or force_bc
+    comp_ad = (A << 1) if (A != 0 and D != 0) else 0
+    comp_bc = (C << 1) if (C != 0 and B != 0) else 0
+    ad_term = (A * D) if exec_ad else comp_ad
+    bc_term = (B * C) if exec_bc else comp_bc
+    return ((A * C) << n) + ad_term + bc_term  # BD always omitted
+
+
+def afpm_mult_bits(xb: int, yb: int, n: int, mode: str, fmt) -> int:
+    """The full datapath on uint32 carriers; returns the uint32 result."""
+    man_bits, bias, max_exp_field = _fmt_params(fmt)
+    M = man_bits
+    sx, ex, mx = decode(xb, fmt)
+    sy, ey, my = decode(yb, fmt)
+    s = sx ^ sy
+
+    if mode == "ac":
+        T = min(3 * n, M)
+        U = 1 << T
+        cross = ac_cross(mx, my, n, M)
+        cross_t = cross >> (3 * n - T) if 3 * n > T else cross << (T - 3 * n)
+        acc = U + (mx >> (M - T)) + (my >> (M - T)) + cross_t
+    else:  # acl
+        T = n
+        U = 1 << T
+        A = mx >> (M - n)
+        C = my >> (M - n)
+        acc = U + A + C + (A & C)
+
+    ge2 = acc >= (U << 1)
+    acc_n = acc >> 1 if ge2 else acc
+    man_res = (acc_n - U) << (M - T)  # zero-padded to the format width
+    e_unb = (ex - bias) + (ey - bias) + (1 if ge2 else 0)
+
+    e_min = 1 - bias
+    e_max = max_exp_field - 1 - bias
+    if e_unb > e_max:  # overflow -> signed inf
+        res = (s << 31) | _INF
+    elif e_unb < e_min:  # underflow -> signed zero
+        res = s << 31
+    else:
+        res = (s << 31) | ((e_unb + 127) << 23) | (man_res << (23 - M))
+
+    # special operands on the fp32 carrier (same precedence as the datapath:
+    # zero-flush, then inf, then nan)
+    exp32_x, man32_x = (xb >> 23) & 0xFF, xb & 0x7FFFFF
+    exp32_y, man32_y = (yb >> 23) & 0xFF, yb & 0x7FFFFF
+    x_fin = exp32_x != 255
+    y_fin = exp32_y != 255
+    x_inf = exp32_x == 255 and man32_x == 0
+    y_inf = exp32_y == 255 and man32_y == 0
+    x_nan = exp32_x == 255 and man32_x != 0
+    y_nan = exp32_y == 255 and man32_y != 0
+    x_zero = ex == 0  # true zero or flushed subnormal (in fmt terms)
+    y_zero = ey == 0
+    if (x_zero or y_zero) and x_fin and y_fin:
+        res = s << 31
+    if x_inf or y_inf:
+        res = (s << 31) | _INF
+    if x_nan or y_nan or ((x_inf or y_inf) and (x_zero or y_zero)):
+        res = _CANON_NAN
+    return res
+
+
+def _input_bits(rnd: random.Random, count: int) -> list[int]:
+    specials = [
+        0x00000000, 0x80000000,              # +-0
+        0x7F800000, 0xFF800000,              # +-inf
+        0x7FC00000, 0xFFC00001, 0x7F800001,  # nans (quiet + signalling)
+        0x00000001, 0x807FFFFF,              # subnormals
+        0x00800000, 0x80800000,              # smallest normals
+        0x7F7FFFFF, 0xFF7FFFFF,              # largest finite
+        0x3F800000, 0xBF800000,              # +-1
+        0x3FFFFFFF, 0x34000000, 0x4E800000,  # assorted magnitudes
+    ]
+    out = list(specials)
+    while len(out) < count:
+        out.append(rnd.getrandbits(32))
+    return out[:count]
+
+
+CONFIGS = [
+    {"label": "AC5-5/fp32", "n": 5, "mode": "ac", "fmt": "fp32"},
+    {"label": "ACL4/fp32", "n": 4, "mode": "acl", "fmt": "fp32"},
+    {"label": "AC3-3/bf16", "n": 3, "mode": "ac", "fmt": "bf16"},
+    {"label": "ACL4/bf16", "n": 4, "mode": "acl", "fmt": "bf16"},
+]
+
+N_VECTORS = 256
+
+
+def generate() -> dict:
+    rnd = random.Random(20260730)
+    cases = []
+    for cfg in CONFIGS:
+        xs = _input_bits(rnd, N_VECTORS)
+        ys = _input_bits(rnd, N_VECTORS)
+        rnd.shuffle(ys)
+        outs = [
+            afpm_mult_bits(x, y, cfg["n"], cfg["mode"], FORMATS[cfg["fmt"]])
+            for x, y in zip(xs, ys)
+        ]
+        cases.append({**cfg, "x_bits": xs, "y_bits": ys, "out_bits": outs})
+    return {"generator": os.path.basename(__file__), "seed": 20260730,
+            "cases": cases}
+
+
+if __name__ == "__main__":
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "afpm_golden.json")
+    with open(path, "w") as f:
+        json.dump(generate(), f)
+        f.write("\n")
+    print(f"wrote {path}")

@@ -1,7 +1,5 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import formats
 
@@ -19,27 +17,6 @@ def test_format_properties():
 def test_get_format_unknown():
     with pytest.raises(ValueError):
         formats.get_format("fp13")
-
-
-@given(st.floats(width=32, allow_nan=False, allow_infinity=False))
-@settings(max_examples=300, deadline=None)
-def test_np_roundtrip_fp32(x):
-    x = np.float32(x)
-    bits = formats.np_f32_to_bits(x)
-    sign, exp, man = formats.np_decode(bits, formats.FP32)
-    back = formats.np_encode(sign, exp, man, formats.FP32)
-    assert back == bits
-    val = formats.np_decode_to_value(bits, formats.FP32)
-    assert val == np.float64(x)
-
-
-@given(st.floats(width=32, allow_nan=False))
-@settings(max_examples=300, deadline=None)
-def test_np_encode_from_value_matches_cast(x):
-    # float64 -> fp32 RNE must agree with numpy's cast
-    enc = formats.np_encode_from_value(np.float64(x), formats.FP32)
-    want = formats.np_f32_to_bits(np.float32(x))
-    assert enc == want, (x, hex(int(enc)), hex(int(want)))
 
 
 def test_np_encode_from_value_fp16_matches_numpy():

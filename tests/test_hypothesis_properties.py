@@ -1,0 +1,157 @@
+"""Hypothesis property tests for the multiplier datapaths and formats.
+
+Collected here (from test_core_afpm / test_core_exact_mult /
+test_core_formats / test_system) behind a single ``pytest.importorskip``
+so a bare environment — no ``hypothesis`` installed — still collects the
+whole suite with zero errors while the deterministic tests in those
+modules keep running.  Install the test extras (``pip install -e .[test]``
+or ``requirements-test.txt``) to run these.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import exact_mult, formats
+from repro.core.afpm import AFPMConfig, afpm_mult_f32
+from repro.core.registry import get_multiplier
+
+finite = st.floats(width=32, allow_nan=False, allow_infinity=False,
+                   allow_subnormal=False)
+f32_full = st.floats(width=32, allow_nan=False, allow_infinity=True,
+                     allow_subnormal=True)
+mults = st.sampled_from(["AC4-4", "AC5-5", "AC6-6", "ACL5", "MMBS6", "CSS16",
+                         "NC", "HPC"])
+
+
+def _mult(x, y, **kw):
+    return np.asarray(afpm_mult_f32(jnp.float32(x), jnp.float32(y), AFPMConfig(**kw)))
+
+
+# ---- AFPM algebraic properties (from test_core_afpm) -----------------------
+
+@given(finite, finite)
+@settings(max_examples=300, deadline=None)
+def test_sign_symmetry(x, y):
+    # sign path is exact XOR logic, so |.| and sign factor commute
+    r = _mult(x, y, n=5)
+    r_neg = _mult(-x, y, n=5)
+    np.testing.assert_array_equal(r_neg, -r)
+
+
+@given(finite, finite)
+@settings(max_examples=300, deadline=None)
+def test_commutative(x, y):
+    # A/C and B/D play symmetric roles (incl. the special-case forcing rules)
+    np.testing.assert_array_equal(_mult(x, y, n=5), _mult(y, x, n=5))
+
+
+@given(finite)
+@settings(max_examples=200, deadline=None)
+def test_mult_by_zero_and_one_powers(x):
+    assert _mult(x, 0.0, n=5) == 0.0
+    # powers of two have zero mantissa -> product equals the operand with its
+    # mantissa truncated to 3n bits (paper Fig. 3: inputs keep upper 3n bits)
+    from repro.core.formats import truncate_mantissa
+
+    for p in (1.0, 2.0, 0.5, 4.0):
+        r = float(_mult(x, p, n=5))
+        want = float(np.float32(np.asarray(truncate_mantissa(np.float32(x), 15))) * np.float32(p))
+        if np.isfinite(want) and abs(want) >= float(np.float32(2.0 ** -126)):
+            assert r == want, (x, p, r, want)
+
+
+@given(finite, finite)
+@settings(max_examples=300, deadline=None)
+def test_relative_error_bound(x, y):
+    # AC-n-n truncates at most ~2^-(2n-? ) of each mantissa; conservative
+    # bound: relative error < 2^-(n-1) for all normal operands/results.
+    r = float(_mult(x, y, n=5))
+    want = float(np.float32(x) * np.float32(y))
+    if want == 0.0 or not np.isfinite(want) or abs(want) < 2.0 ** -100:
+        return
+    assert abs(r - want) / abs(want) < 2.0 ** -4, (x, y, r, want)
+
+
+# ---- exact multiplier bit-exactness (from test_core_exact_mult) ------------
+
+@given(f32_full, f32_full)
+@settings(max_examples=500, deadline=None)
+def test_bit_exact_vs_host_fp32(x, y):
+    x, y = np.float32(x), np.float32(y)
+    got = exact_mult.np_exact_mult_f32(x, y)
+    want = x * y
+    if np.isnan(want):
+        assert np.isnan(got), (x, y, got, want)  # nan payloads may differ
+    else:
+        assert got.view(np.uint32) == want.view(np.uint32), (x, y, got, want)
+
+
+# ---- format encode/decode roundtrips (from test_core_formats) --------------
+
+@given(st.floats(width=32, allow_nan=False, allow_infinity=False))
+@settings(max_examples=300, deadline=None)
+def test_np_roundtrip_fp32(x):
+    x = np.float32(x)
+    bits = formats.np_f32_to_bits(x)
+    sign, exp, man = formats.np_decode(bits, formats.FP32)
+    back = formats.np_encode(sign, exp, man, formats.FP32)
+    assert back == bits
+    val = formats.np_decode_to_value(bits, formats.FP32)
+    assert val == np.float64(x)
+
+
+@given(st.floats(width=32, allow_nan=False))
+@settings(max_examples=300, deadline=None)
+def test_np_encode_from_value_matches_cast(x):
+    # float64 -> fp32 RNE must agree with numpy's cast
+    enc = formats.np_encode_from_value(np.float64(x), formats.FP32)
+    want = formats.np_f32_to_bits(np.float32(x))
+    assert enc == want, (x, hex(int(enc)), hex(int(want)))
+
+
+# ---- system invariants over the registry (from test_system) ----------------
+
+@given(mults, finite, finite)
+@settings(max_examples=200, deadline=None)
+def test_every_multiplier_sign_correct(name, x, y):
+    """Invariant: all registry multipliers have an EXACT sign/zero path."""
+    r = float(get_multiplier(name)(jnp.float32(x), jnp.float32(y)))
+    want = np.float32(x) * np.float32(y)
+    if want == 0 or not np.isfinite(want) or abs(want) < 2.0 ** -100:
+        return
+    assert np.sign(r) == np.sign(want) or r == 0.0, (name, x, y, r)
+
+
+@given(mults, finite, finite)
+@settings(max_examples=200, deadline=None)
+def test_every_multiplier_bounded_error(name, x, y):
+    """Invariant: relative error never exceeds the Mitchell bound (~12.5%)
+    for normal operands/results — the worst design in the registry."""
+    r = float(get_multiplier(name)(jnp.float32(x), jnp.float32(y)))
+    want = float(np.float32(x) * np.float32(y))
+    if want == 0 or not np.isfinite(want) or abs(want) < 2.0 ** -60:
+        return
+    assert abs(r - want) / abs(want) < 0.13, (name, x, y, r, want)
+
+
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(2, 6))
+@settings(max_examples=30, deadline=None)
+def test_segmented_matmul_linearity(passes, m, n):
+    """Invariant: segmented matmul is (near-)linear in its inputs — term
+    dropping must commute with addition for gradient correctness."""
+    from repro.core.numerics import segmented_matmul_xla
+
+    rng = np.random.default_rng(m * 7 + n)
+    x1 = jnp.asarray(rng.standard_normal((m, 8)), jnp.float32)
+    x2 = jnp.asarray(rng.standard_normal((m, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, n)), jnp.float32)
+    both = np.asarray(segmented_matmul_xla(x1 + x2, w, passes))
+    sep = np.asarray(segmented_matmul_xla(x1, w, passes)) + \
+        np.asarray(segmented_matmul_xla(x2, w, passes))
+    # not bit-equal (hi/lo split is nonlinear at bf16 boundaries) but tight
+    np.testing.assert_allclose(both, sep, rtol=0.05, atol=0.05)

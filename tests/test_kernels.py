@@ -66,10 +66,14 @@ def test_afpm_matmul_ops_wrapper_batch_dims():
 
 
 def test_afpm_matmul_rejects_bad_shapes():
+    # batched (3-D+) x is legal since the substrate (tested in
+    # test_kernels_dispatch); bad contraction or rank still raises
     with pytest.raises(ValueError):
         afpm_matmul_pallas(jnp.zeros((4, 8)), jnp.zeros((9, 4)))
     with pytest.raises(ValueError):
-        afpm_matmul_pallas(jnp.zeros((4, 8, 2)), jnp.zeros((2, 4)))
+        afpm_matmul_pallas(jnp.zeros((8,)), jnp.zeros((8, 4)))
+    with pytest.raises(ValueError):
+        afpm_matmul_pallas(jnp.zeros((4, 8)), jnp.zeros((8,)))
 
 
 # ---------------------------------------------------------------------------

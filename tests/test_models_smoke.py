@@ -145,7 +145,7 @@ def test_numerics_knob_changes_lm_output():
     batch = _batch_for(cfg)
     h_exact, _, _ = transformer.backbone(params, cfg, batch, mode="train")
     cfg_seg = dataclasses.replace(
-        cfg, numerics=NumericsConfig(mode="segmented", seg_passes=3, use_pallas=False))
+        cfg, numerics=NumericsConfig(mode="segmented", seg_passes=3, backend="xla"))
     h_seg, _, _ = transformer.backbone(params, cfg_seg, batch, mode="train")
     d = np.abs(np.asarray(h_exact) - np.asarray(h_seg))
     rel = d.mean() / (np.abs(np.asarray(h_exact)).mean() + 1e-9)

@@ -1,5 +1,8 @@
 """Integration: real training loops converge; checkpoint/restart is exact;
-pipeline parallelism matches sequential execution; adafactor works."""
+pipeline parallelism matches sequential execution; adafactor works.
+
+The training-loop tests are marked ``slow`` (deselected by default, run
+with ``pytest -m ''`` or in CI's full job) to keep the default run fast."""
 import os
 
 import jax
@@ -11,14 +14,18 @@ from repro.launch.train import train
 from repro.optim import adafactor
 
 
+@pytest.mark.slow
 def test_lm_training_loss_decreases(tmp_path):
+    # lr sized for the reduced 2-layer/d=64 config (the 3e-4 default is
+    # tuned for the full-size archs and barely moves in 30 steps)
     _, _, losses = train("qwen3-4b", steps=30, seq_len=64, batch=4,
-                         ckpt_dir=None, log_every=10)
+                         ckpt_dir=None, log_every=10, lr=3e-3)
     first = np.mean(losses[:5])
     last = np.mean(losses[-5:])
     assert last < first - 0.2, (first, last)  # markov data is learnable
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_exact(tmp_path):
     d = str(tmp_path / "ck")
     # run 20 steps with checkpointing every 10
@@ -41,6 +48,7 @@ def test_checkpoint_restart_exact(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_adafactor_converges_and_is_small():
     k = jax.random.PRNGKey(0)
     W = jax.random.normal(k, (256, 256)) / 16
@@ -87,6 +95,7 @@ def test_pipeline_parallel_matches_sequential():
     assert bubble_fraction(2, 3) == pytest.approx(1 / 4)
 
 
+@pytest.mark.slow
 def test_serve_numerics_knob_runs():
     from repro.launch.serve import serve
 
