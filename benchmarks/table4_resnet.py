@@ -6,9 +6,16 @@ hundred steps — this container is a single CPU core), then inference runs
 with every conv/fc product routed through the approximate multiplier
 (bit-level emulation, im2col + afpm_matmul_emulated).  Reported: MRED/NMED
 of the multiplier itself plus Top-1 accuracy vs the exact baseline.
+
+``--auto BUDGET`` additionally runs the per-layer auto-configurer
+(``repro.core.sweep.auto_configure``): a greedy sensitivity sweep over the
+network's layers against a calibration batch that emits a NumericsPolicy
+meeting the logits-MRED budget at minimum modeled area (``--out`` saves it
+as JSON for ``repro.launch.serve --policy``).
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import time
 
@@ -16,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sweep
 from repro.core.metrics import mred, nmed, top_k_accuracy
 from repro.core.numerics import NumericsConfig
 from repro.core.registry import get_multiplier
@@ -111,5 +119,63 @@ def run(csv_rows=None, train_steps=120, eval_n=48):
           "NC the largest drop (Table IV).")
 
 
+SEGMENTED_CANDIDATES = [
+    ("segmented-1", NumericsConfig(mode="segmented", seg_passes=1, backend="xla")),
+    ("segmented-2", NumericsConfig(mode="segmented", seg_passes=2, backend="xla")),
+    ("segmented-3", NumericsConfig(mode="segmented", seg_passes=3, backend="xla")),
+]
+
+
+def run_auto(budget=1e-2, train_steps=120, calib_n=32, candidates="segmented",
+             out=None):
+    """Budget-driven per-layer configuration of the Table IV network.
+
+    ``candidates='segmented'`` uses the fast split-float ladder (CPU-cheap
+    calibration); ``'emulated'`` uses the bit-level Pareto-frontier designs
+    (paper-faithful, hours on one core).  Prints the chosen per-layer
+    assignment and the modeled-area saving vs the all-exact baseline.
+    """
+    print(f"\n== auto-configure: per-layer numerics under MRED <= {budget:g} ==")
+    cfg, params, state = train_resnet(steps=train_steps)
+    dcfg = DataConfig(global_batch=calib_n, seed=123)
+    calib = cifar_like(dcfg, 20_000, n=calib_n)
+    images = jnp.asarray(calib["images"])
+    ref, _ = resnet.apply(params, state, images, cfg, train=False)
+    ref = np.asarray(ref, np.float64)
+
+    def eval_fn(policy):
+        acfg = dataclasses.replace(cfg, numerics=policy)
+        logits, _ = resnet.apply(params, state, images, acfg, train=False)
+        return mred(np.asarray(logits), ref)
+
+    cand = SEGMENTED_CANDIDATES if candidates == "segmented" else None
+    res = sweep.auto_configure(eval_fn, resnet.layer_paths(cfg), budget,
+                               candidates=cand, verbose=True)
+    print(f"[auto] error={res.error:.3e} (budget {budget:g})  "
+          f"area {res.area_um2:,.0f} um^2 vs exact {res.baseline_area_um2:,.0f} "
+          f"(-{res.area_reduction:.1%})  [{res.n_evals} calibration evals]")
+    for path, name in res.assignments:
+        print(f"  {path:16s} -> {name}")
+    if out:
+        with open(out, "w") as f:
+            f.write(res.policy.to_json())
+        print(f"[auto] policy written to {out} (rule paths are this ResNet's "
+              f"layers; schema + LM-serving policies: docs/numerics_policy.md)")
+    return res
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--auto", type=float, default=None, metavar="BUDGET",
+                    help="run the per-layer auto-configurer at this MRED budget "
+                         "instead of the fixed Table IV grid")
+    ap.add_argument("--candidates", choices=["segmented", "emulated"],
+                    default="segmented")
+    ap.add_argument("--out", default=None, help="write the policy JSON here")
+    ap.add_argument("--train-steps", type=int, default=120)
+    args = ap.parse_args()
+    if args.auto is not None:
+        run_auto(budget=args.auto, candidates=args.candidates, out=args.out,
+                 train_steps=args.train_steps)
+    else:
+        run()

@@ -17,6 +17,7 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 from repro.core.numerics import NumericsConfig
+from repro.core.policy import Numerics
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,8 +80,9 @@ class ArchConfig:
     enc_len: int = 1500           # encoder output length kept in serving state
     frontend: str = "none"        # none | audio_stub | vision_stub
     dense_d_ff: Optional[int] = None  # dense-layer ff when it differs from d_ff (deepseek)
-    # numerics (the paper's knob)
-    numerics: NumericsConfig = NumericsConfig(mode="exact")
+    # numerics (the paper's knob): one global NumericsConfig, or a
+    # NumericsPolicy mapping layer paths to configs (repro.core.policy)
+    numerics: Numerics = NumericsConfig(mode="exact")
     # training/serving details
     dtype: str = "bfloat16"
     param_dtype: str = "float32"  # bfloat16 for the memory-constrained giants

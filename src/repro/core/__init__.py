@@ -7,12 +7,16 @@ Public surface:
   baselines    — MMBS / CSS / NC-LPC-HPC comparison designs
   registry     — named multiplier library (the OpenACM operator library role)
   numerics     — NumericsConfig + nmatmul dispatch (compiler integration)
+  policy       — per-layer NumericsPolicy (glob rules over layer paths)
+  sweep        — accuracy-PPA sweep + budget-driven auto-configuration
   metrics      — MRED / NMED / PSNR / top-k
   ppa          — analytical gate-equivalent PPA model (Table II stand-in)
 """
-from . import afpm, baselines, exact_mult, formats, metrics, numerics, ppa, registry
+from . import (afpm, baselines, exact_mult, formats, metrics, numerics,
+               policy, ppa, registry)
 from .afpm import AFPMConfig, afpm_matmul_emulated, afpm_mult_f32
 from .numerics import EXACT, NumericsConfig, nmatmul, segmented_matmul_xla
+from .policy import NumericsPolicy, PolicyRule
 from .registry import available, get_multiplier
 
 __all__ = [
@@ -28,8 +32,11 @@ __all__ = [
     "formats",
     "get_multiplier",
     "metrics",
+    "NumericsPolicy",
+    "PolicyRule",
     "nmatmul",
     "numerics",
+    "policy",
     "ppa",
     "registry",
     "segmented_matmul_xla",

@@ -25,6 +25,10 @@ Modes
     ``interpret``  Pallas kernel body in interpreter mode (any backend;
                    what tests use to validate the kernels on CPU)
     ``xla``        force the pure-jnp reference implementation
+
+Per-layer configuration lives one level up: ``repro.core.policy`` maps
+layer paths (glob rules) to NumericsConfigs, and :func:`nmatmul` accepts
+either a single config or a policy plus the call site's ``path``.
 """
 from __future__ import annotations
 
@@ -81,9 +85,20 @@ def segmented_matmul_xla(x, w, passes: int = 3):
     return ref.afpm_matmul_ref(x, w, passes)
 
 
-def nmatmul(x: jax.Array, w: jax.Array, cfg: Optional[NumericsConfig] = None):
-    """Numerics-aware matmul: ``x @ w`` under the configured multiplier."""
-    cfg = cfg or EXACT
+def nmatmul(x: jax.Array, w: jax.Array, cfg: Optional[NumericsConfig] = None,
+            path: str = ""):
+    """Numerics-aware matmul: ``x @ w`` under the configured multiplier.
+
+    ``cfg`` may be a plain :class:`NumericsConfig` (``path`` is ignored) or
+    a ``repro.core.policy`` policy/scoped-policy, in which case the config
+    is resolved per call site from the layer ``path`` — this is what lets
+    one forward pass run different numerics in different layers.
+    """
+    if cfg is None:
+        cfg = EXACT
+    elif not isinstance(cfg, NumericsConfig):
+        cfg = cfg.lookup(path)  # NumericsPolicy / ScopedPolicy (duck-typed
+        # here to keep core.numerics import-cycle-free; see core/policy.py)
     if cfg.mode == "exact":
         dt = jnp.dtype(cfg.compute_dtype)
         return jax.lax.dot_general(

@@ -1,0 +1,209 @@
+"""Per-layer numerics policies — the compiler's per-layer configuration map.
+
+The paper's framework picks a (multiplier, segmentation) configuration per
+error budget; OpenACMv2 extends the selection to *per layer* of a network
+(accuracy-constrained co-optimization), and the hybrid-domain FP-CiM line
+shows DNN layers differ sharply in how much multiplier precision they
+need.  A :class:`NumericsPolicy` is the system-level expression of that:
+an ordered list of ``(glob pattern, NumericsConfig)`` rules over *layer
+paths* plus a default, so a single forward pass can run exact attention,
+segmented-1 MLPs and an exact ``lm_head`` at the same time.
+
+Layer paths
+-----------
+Every ``nmatmul`` call site in the model zoo has a stable dotted path:
+
+=====================  ====================================================
+model                  paths
+=====================  ====================================================
+transformer (LM zoo)   ``blocks.{i}.attn.{wq,wk,wv,wo}`` (GQA/local),
+                       ``blocks.{i}.attn.{wq_a,wq_b,wkv_a,wo}`` (MLA),
+                       ``blocks.{i}.mlp.{wi,wg,wo}`` (dense MLP),
+                       ``blocks.{i}.mlp.shared.{wi,wg,wo}`` (MoE shared),
+                       ``blocks.{i}.ssm.{in_proj,out_proj,scan}``,
+                       ``blocks.{i}.cross.{wq,wk,wv,wo}`` (enc-dec),
+                       ``encoder.blocks.*`` (whisper encoder, unindexed),
+                       ``lm_head``
+resnet (Table IV)      ``stem``, ``s{stage}b{block}.{conv1,conv2,proj}``,
+                       ``fc``
+=====================  ====================================================
+
+``{i}`` is the global layer index (0-based, execution order).  The
+``ssm.scan`` path carries only its ``backend`` field (the selective scan
+is not a multiplier datapath; its kernel backend is still selectable).
+
+Matching and precedence
+-----------------------
+Rules are matched with :func:`fnmatch.fnmatchcase` (shell globs: ``*``
+matches any run of characters including dots, ``?`` one character,
+``[seq]`` a set).  Rules are evaluated **in order; the first matching
+rule wins**; if no rule matches, ``default`` applies.  Put specific rules
+(``blocks.0.attn.wq``) before broad ones (``blocks.*``).
+
+Scan homogeneity
+----------------
+Transformer depth runs as ``jax.lax.scan`` over layer repeats, which
+requires every repeat to trace identically.  ``transformer.stack_apply``
+checks each scanned segment against the policy: if all repeats resolve to
+the same configs the segment stays scanned; otherwise it is transparently
+unrolled (per-repeat trace, compile time grows with depth — intended for
+serving, where the policy is fixed).
+
+Serialization
+-------------
+``to_json`` / ``from_json`` round-trip the policy (see
+``docs/numerics_policy.md`` for the schema), so an auto-configured policy
+(``repro.core.sweep.auto_configure``) can be saved and served with
+``python -m repro.launch.serve --policy policy.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Iterable, Mapping, Sequence, Tuple, Union
+
+from .numerics import EXACT, NumericsConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """One ``pattern -> config`` entry; ``pattern`` is a shell glob."""
+
+    pattern: str
+    config: NumericsConfig
+
+    def matches(self, path: str) -> bool:
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    """Ordered glob rules over layer paths; first match wins, else default."""
+
+    rules: Tuple[PolicyRule, ...] = ()
+    default: NumericsConfig = EXACT
+
+    def __post_init__(self):
+        # accept any iterable of rules / (pattern, config) pairs
+        norm = tuple(
+            r if isinstance(r, PolicyRule) else PolicyRule(*r)
+            for r in self.rules
+        )
+        object.__setattr__(self, "rules", norm)
+
+    # -- resolution ---------------------------------------------------------
+
+    def lookup(self, path: str) -> NumericsConfig:
+        """Resolve one layer path to its NumericsConfig."""
+        for rule in self.rules:
+            if rule.matches(path):
+                return rule.config
+        return self.default
+
+    def scope(self, prefix: str) -> "ScopedPolicy":
+        """View of this policy with ``prefix.`` prepended to every lookup."""
+        return ScopedPolicy(self, prefix)
+
+    # -- construction helpers ----------------------------------------------
+
+    @classmethod
+    def from_assignments(cls, assignments: Mapping[str, NumericsConfig],
+                         default: NumericsConfig = EXACT) -> "NumericsPolicy":
+        """Exact-path rules from a {path: config} map (auto-configurer output)."""
+        return cls(tuple(PolicyRule(p, c) for p, c in assignments.items()),
+                   default)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "default": _config_to_dict(self.default),
+            "rules": [
+                {"pattern": r.pattern, "config": _config_to_dict(r.config)}
+                for r in self.rules
+            ],
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "NumericsPolicy":
+        default = _config_from_dict(d.get("default", {}))
+        rules = tuple(
+            PolicyRule(r["pattern"], _config_from_dict(r.get("config", {})))
+            for r in d.get("rules", ())
+        )
+        return cls(rules, default)
+
+    @classmethod
+    def from_json(cls, text: str) -> "NumericsPolicy":
+        return cls.from_dict(json.loads(text))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopedPolicy:
+    """A policy view rooted at a path prefix (cheap, created per layer)."""
+
+    policy: NumericsPolicy
+    prefix: str
+
+    def lookup(self, path: str = "") -> NumericsConfig:
+        return self.policy.lookup(_join(self.prefix, path))
+
+    def scope(self, prefix: str) -> "ScopedPolicy":
+        return ScopedPolicy(self.policy, _join(self.prefix, prefix))
+
+
+Numerics = Union[NumericsConfig, NumericsPolicy, ScopedPolicy]
+
+
+def _join(prefix: str, path: str) -> str:
+    if not prefix:
+        return path
+    if not path:
+        return prefix
+    return f"{prefix}.{path}"
+
+
+def _config_to_dict(cfg: NumericsConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+_CONFIG_FIELDS = {f.name for f in dataclasses.fields(NumericsConfig)}
+
+
+def _config_from_dict(d: Mapping) -> NumericsConfig:
+    unknown = set(d) - _CONFIG_FIELDS
+    if unknown:
+        raise ValueError(
+            f"unknown NumericsConfig fields {sorted(unknown)}; "
+            f"expected a subset of {sorted(_CONFIG_FIELDS)}")
+    return NumericsConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# duck-typed helpers used at every model call site — a plain NumericsConfig
+# passes through untouched, so all pre-policy code keeps working
+# ---------------------------------------------------------------------------
+
+def is_policy(ncfg) -> bool:
+    return isinstance(ncfg, (NumericsPolicy, ScopedPolicy))
+
+
+def resolve(ncfg: Numerics | None, path: str = "") -> NumericsConfig:
+    """Resolve a config-or-policy to the concrete config for ``path``."""
+    if ncfg is None:
+        return EXACT
+    if isinstance(ncfg, NumericsConfig):
+        return ncfg
+    return ncfg.lookup(path)
+
+
+def scoped(ncfg: Numerics, *parts: str) -> Numerics:
+    """Scope a policy under ``parts`` (no-op for a plain NumericsConfig)."""
+    if is_policy(ncfg):
+        for p in parts:
+            ncfg = ncfg.scope(p)
+    return ncfg

@@ -5,16 +5,28 @@ configurations systematically.  This module produces the Pareto frontier
 over the registered designs — error (MRED on a caller-supplied operand
 distribution) vs area/power from the analytical model — and can recommend
 a configuration for an error budget.
+
+:func:`auto_configure` lifts the selection from one multiplier to a whole
+network (the OpenACMv2 accuracy-constrained co-optimization role): given a
+network-level error budget and an evaluation callback over a calibration
+batch, a greedy per-layer sensitivity sweep assigns each layer the
+cheapest design (by the same PPA model) whose cumulative network error
+stays within budget, and emits a serializable
+:class:`~repro.core.policy.NumericsPolicy`.
 """
 from __future__ import annotations
 
 import dataclasses
+import re
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from . import ppa
 from .metrics import mred
+from .numerics import NumericsConfig
+from .policy import NumericsPolicy
 from .registry import get_multiplier
 
 SWEEPABLE = {
@@ -70,3 +82,132 @@ def recommend(error_budget: float, metric: str = "area_um2", **kw) -> SweepPoint
     if not candidates:
         raise ValueError(f"no design meets MRED <= {error_budget}")
     return min(candidates, key=lambda p: getattr(p, metric))
+
+
+# ---------------------------------------------------------------------------
+# per-layer auto-configuration (network-level budget -> NumericsPolicy)
+# ---------------------------------------------------------------------------
+
+def config_ppa(cfg: NumericsConfig) -> ppa.PPAEstimate:
+    """PPA estimate of the multiplier a NumericsConfig instantiates.
+
+    ``segmented`` mode (the TPU split-float analogue) is modeled by its
+    hardware counterpart: 1 pass ≈ ACL-n (single high-segment product),
+    2-3 passes ≈ AC-n-n (conditional multi-pass) — a proxy, but the same
+    one the paper's Table II rows describe.
+    """
+    if cfg.mode == "exact":
+        return ppa.estimate("exact", name="Exact")
+    if cfg.mode == "emulated":
+        spec = SWEEPABLE.get(cfg.multiplier) or SWEEPABLE.get(cfg.multiplier.upper())
+        if spec is None:  # AFPM family outside the sweep table (e.g. AC-fp16)
+            low = cfg.multiplier.lower()
+            kind = "acl" if low.startswith("acl") else "ac"
+            return ppa.estimate(kind, name=cfg.multiplier, n=cfg.seg_n)
+        kind, kw = spec
+        return ppa.estimate(kind, name=cfg.multiplier, **kw)
+    if cfg.mode == "segmented":
+        kind = "acl" if cfg.seg_passes == 1 else "ac"
+        return ppa.estimate(kind, name=f"segmented-{cfg.seg_passes}", n=cfg.seg_n)
+    raise ValueError(f"unknown numerics mode {cfg.mode!r}")
+
+
+def policy_area(policy: NumericsPolicy, layer_paths: Sequence[str]) -> float:
+    """Modeled logic area (um^2) of one multiplier instance per layer."""
+    return sum(config_ppa(policy.lookup(p)).logic_area_um2 for p in layer_paths)
+
+
+def _emulated_config(name: str) -> NumericsConfig:
+    m = re.match(r"ACL?(\d)", name)
+    return NumericsConfig(mode="emulated", multiplier=name,
+                          seg_n=int(m.group(1)) if m else 5)
+
+
+def pareto_candidates(**kw) -> list:
+    """(name, NumericsConfig) per Pareto-frontier design — the default
+    per-layer candidate set for :func:`auto_configure`."""
+    return [(p.name, _emulated_config(p.name)) for p in sweep(**kw) if p.pareto]
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoConfigResult:
+    policy: NumericsPolicy                    # serializable (policy.to_json())
+    error: float                              # achieved network error
+    area_um2: float                           # modeled logic area, all layers
+    baseline_area_um2: float                  # all layers on the default design
+    assignments: Tuple[Tuple[str, str], ...]  # (layer path, design name)
+    n_evals: int                              # eval_fn invocations spent
+
+    @property
+    def area_reduction(self) -> float:
+        return 1.0 - self.area_um2 / self.baseline_area_um2
+
+
+def auto_configure(eval_fn: Callable[[NumericsPolicy], float],
+                   layer_paths: Sequence[str],
+                   error_budget: float,
+                   candidates: Optional[Sequence[Tuple[str, NumericsConfig]]] = None,
+                   default: Optional[NumericsConfig] = None,
+                   verbose: bool = False) -> AutoConfigResult:
+    """Greedy per-layer design selection under a network error budget.
+
+    ``eval_fn(policy)`` runs the network on a calibration batch under
+    ``policy`` and returns its error versus the exact baseline (e.g. MRED
+    of the logits — any monotone scalar works).  ``layer_paths`` names the
+    layers to configure (e.g. ``repro.models.resnet.layer_paths(cfg)``);
+    ``candidates`` is a ``(name, NumericsConfig)`` list (default: the
+    emulated Pareto-frontier designs from :func:`pareto_candidates`);
+    ``default`` is the config of unassigned layers (default exact fp32).
+
+    Greedy schedule: probe each layer's sensitivity by putting the
+    cheapest candidate on that layer alone, then visit layers least-
+    sensitive first, assigning each the cheapest candidate whose
+    *cumulative* policy stays within budget (re-evaluated jointly, so
+    error interactions between layers are respected).  Layers where no
+    candidate fits stay on the default.  Cost: ``O(L)`` probe evals plus
+    up to ``O(L * C)`` assignment evals.
+    """
+    default = default or NumericsConfig(mode="exact", compute_dtype="float32")
+    cand = list(candidates) if candidates is not None else pareto_candidates()
+    cand.sort(key=lambda nc: config_ppa(nc[1]).logic_area_um2)
+    exact_area = config_ppa(default).logic_area_um2
+    cand = [(n, c) for n, c in cand
+            if config_ppa(c).logic_area_um2 < exact_area]
+    if not cand:
+        raise ValueError("no candidate is cheaper than the default design")
+    n_evals = 0
+
+    def evaluate(assign) -> float:
+        nonlocal n_evals
+        n_evals += 1
+        return float(eval_fn(NumericsPolicy.from_assignments(
+            {p: c for p, (_, c) in assign.items()}, default=default)))
+
+    sens = {p: evaluate({p: cand[0]}) for p in layer_paths}
+    assign: dict = {}
+    err = evaluate(assign)  # default-only policy (0 when default == baseline)
+    for p in sorted(layer_paths, key=lambda q: sens[q]):
+        for name, c in cand:
+            trial = dict(assign)
+            trial[p] = (name, c)
+            e = evaluate(trial)
+            if e <= error_budget:
+                assign, err = trial, e
+                if verbose:
+                    print(f"[auto_configure] {p:16s} -> {name:7s} "
+                          f"err={e:.3e} (budget {error_budget:.3e})")
+                break
+        else:
+            if verbose:
+                print(f"[auto_configure] {p:16s} -> default (no candidate fits)")
+
+    policy = NumericsPolicy.from_assignments(
+        {p: c for p, (_, c) in assign.items()}, default=default)
+    return AutoConfigResult(
+        policy=policy,
+        error=err,
+        area_um2=policy_area(policy, layer_paths),
+        baseline_area_um2=exact_area * len(layer_paths),
+        assignments=tuple((p, assign[p][0]) for p in layer_paths if p in assign),
+        n_evals=n_evals,
+    )

@@ -1,6 +1,14 @@
 """Elastic restart orchestration: tie together heartbeat, mesh planning,
 checkpoint re-sharding and the restart policy into one recovery routine.
 
+Reproduces nothing from the paper directly — it is the availability
+layer the ROADMAP's production-scale serving/training goal needs: when a
+worker dies mid-run, the coordinator re-plans the (data, model) mesh
+over the survivors, re-shards the latest checkpoint
+(``repro.checkpoint.io``) onto it, and resumes, so a long
+approximate-numerics training or serving job keeps its accumulated
+state.  Exercised by ``tests/test_elastic.py``.
+
 On a real pod this runs in the coordinator; everything except the actual
 process relaunch is exercised by unit tests here (the relaunch is a
 callback so tests can fake it).

@@ -6,6 +6,13 @@ all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
 multiplying ops inside ``while`` bodies by the loop's
 ``known_trip_count`` (XLA annotates scan-derived loops with it) — without
 this, a 61-layer scanned model would under-count its collectives 61x.
+
+Enables the dry-run/roofline story (``launch.dryrun``,
+``benchmarks/roofline.py``): predicted communication terms for the model
+zoo under different meshes and numerics configs without owning a pod —
+the system-level analogue of the paper's analytical PPA model
+(``repro.core.ppa``), applied to collectives instead of multiplier
+datapaths.  Exercised by ``tests/test_hlo_analysis.py``.
 """
 from __future__ import annotations
 

@@ -1,6 +1,12 @@
 """Cross-pod training utilities: hierarchical gradient reduction + optional
 int8 compression on the DCN hop.
 
+Enables the ROADMAP's multi-pod scale-out: training the model zoo beyond
+one pod under the paper's numerics config, with the slow inter-pod hop
+compressed the same way the paper compresses arithmetic — trade a little
+fidelity (int8 + error feedback) for a large resource saving.  Exercised
+by ``tests/test_multipod.py``.
+
 At 2+ pods the gradient reduction is hierarchical:
   1. reduce-scatter within each pod over 'data' (fast ICI),
   2. all-reduce the scattered shards across pods over 'pod' (slow DCN) —

@@ -12,6 +12,13 @@ each step boundary; prefill admits one request at a time into its slot
 (cache writes at the slot's row), decode advances all active slots
 together.  Per-slot sampling is greedy (the numerics knob is the
 experiment here, not samplers).
+
+Enables the paper's configurability claim under real serving load: the
+numerics config — including a per-layer ``NumericsPolicy``
+(``repro.core.policy``) — is fixed at compile time while requests stream
+through continuously, which is exactly the deployment shape of a CiM
+accelerator whose multiplier configuration is set per model, not per
+request.  Exercised by ``tests/test_scheduler.py``.
 """
 from __future__ import annotations
 

@@ -2,7 +2,10 @@
 
 Demonstrates the paper's accuracy-configurable serving: the same weights
 served under exact / segmented-3 / segmented-1 (ACL-like) numerics, with
-per-request greedy decoding.
+per-request greedy decoding.  ``--policy policy.json`` serves under a
+per-layer :class:`~repro.core.policy.NumericsPolicy` (e.g. one emitted by
+``repro.core.sweep.auto_configure``; schema in ``docs/numerics_policy.md``)
+instead of a single global setting.
 """
 from __future__ import annotations
 
@@ -16,16 +19,24 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.numerics import NumericsConfig
+from repro.core.policy import NumericsPolicy
 from repro.models import transformer
 from repro.models.layers import unzip
 
 
 def serve(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
           gen_len: int = 16, numerics: str = "exact", seed: int = 0,
-          params=None, cfg=None):
+          params=None, cfg=None, policy=None):
     if cfg is None:
         cfg = get_arch(arch).reduced()
-    if numerics != "exact":
+    if policy is not None:
+        # per-layer policy: a NumericsPolicy, or a path to its JSON file
+        if not isinstance(policy, NumericsPolicy):
+            with open(policy) as f:
+                policy = NumericsPolicy.from_json(f.read())
+        cfg = dataclasses.replace(cfg, numerics=policy)
+        numerics = "policy"
+    elif numerics != "exact":
         passes = {"segmented3": 3, "segmented2": 2, "segmented1": 1}[numerics]
         cfg = dataclasses.replace(cfg, numerics=NumericsConfig(
             mode="segmented", seg_passes=passes, backend="xla"))
@@ -65,9 +76,12 @@ def main():
                     choices=["exact", "segmented3", "segmented2", "segmented1"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--policy", default=None, metavar="POLICY_JSON",
+                    help="serve under a per-layer NumericsPolicy (JSON file; "
+                         "overrides --numerics)")
     args = ap.parse_args()
     serve(args.arch, batch=args.batch, gen_len=args.gen_len,
-          numerics=args.numerics)
+          numerics=args.numerics, policy=args.policy)
 
 
 if __name__ == "__main__":

@@ -4,7 +4,10 @@ Numerics: q/k/v/o projections route through ``nmatmul`` (the paper's
 configurable multiplier); the score/PV einsums stay in bf16/fp32 — the CiM
 deployment model puts the approximate multipliers in the stationary-weight
 arrays, while attention's activation-activation products run on the
-(exact) digital datapath.
+(exact) digital datapath.  ``ncfg`` may be a per-layer policy view scoped
+to this block's ``attn``/``cross`` prefix (see ``repro.core.policy``);
+projection call sites carry relative paths (``wq``/``wk``/``wv``/``wo``,
+MLA: ``wq_a``/``wq_b``/``wkv_a``/``wo``).
 
 Memory: training/prefill attention is blockwise (online softmax over KV
 chunks inside a scan over Q chunks), so the score matrix never
@@ -247,9 +250,9 @@ def gqa_apply(params, x, cfg, spec, positions, ncfg: NumericsConfig,
     """Returns (out, new_cache).  cache = dict(k, v) with (B, S_max, KH, D)."""
     B, S, d = x.shape
     H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q = nmatmul(x, params["wq"], ncfg).reshape(B, S, H, hd)
-    k = nmatmul(x, params["wk"], ncfg).reshape(B, S, KH, hd)
-    v = nmatmul(x, params["wv"], ncfg).reshape(B, S, KH, hd)
+    q = nmatmul(x, params["wq"], ncfg, path="wq").reshape(B, S, H, hd)
+    k = nmatmul(x, params["wk"], ncfg, path="wk").reshape(B, S, KH, hd)
+    v = nmatmul(x, params["wv"], ncfg, path="wv").reshape(B, S, KH, hd)
     if cfg.qk_norm:
         q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
@@ -287,7 +290,7 @@ def gqa_apply(params, x, cfg, spec, positions, ncfg: NumericsConfig,
         new_cache = {"k": k_cache, "v": v_cache}
 
     out = out.astype(x.dtype).reshape(B, S, H * hd)
-    return nmatmul(out, params["wo"], ncfg).astype(x.dtype), new_cache
+    return nmatmul(out, params["wo"], ncfg, path="wo").astype(x.dtype), new_cache
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, attn_cap=None):
@@ -350,13 +353,13 @@ def mla_apply(params, x, cfg, spec, positions, ncfg, cache=None, q_offset=0):
     H, m = cfg.n_heads, cfg.mla
     dn, dr, dv, r = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, m.kv_lora_rank
 
-    q = nmatmul(x, params["wq_a"], ncfg)
+    q = nmatmul(x, params["wq_a"], ncfg, path="wq_a")
     q = rmsnorm(params["q_a_norm"], q.astype(x.dtype), cfg.norm_eps)
-    q = nmatmul(q, params["wq_b"], ncfg).reshape(B, S, H, dn + dr)
+    q = nmatmul(q, params["wq_b"], ncfg, path="wq_b").reshape(B, S, H, dn + dr)
     q_nope, q_pe = q[..., :dn], q[..., dn:]
     q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
 
-    kv = nmatmul(x, params["wkv_a"], ncfg)
+    kv = nmatmul(x, params["wkv_a"], ncfg, path="wkv_a")
     ckv, k_pe = kv[..., :r], kv[..., r:]
     ckv = rmsnorm(params["kv_a_norm"], ckv.astype(x.dtype), cfg.norm_eps)
     k_pe = apply_rope(k_pe.reshape(B, S, 1, dr), positions, cfg.rope_theta)
@@ -405,7 +408,7 @@ def mla_apply(params, x, cfg, spec, positions, ncfg, cache=None, q_offset=0):
         new_cache = {"ckv": ckv_c, "kpe": kpe_c}
 
     out = out.astype(x.dtype).reshape(B, S, H * dv)
-    return nmatmul(out, params["wo"], ncfg).astype(x.dtype), new_cache
+    return nmatmul(out, params["wo"], ncfg, path="wo").astype(x.dtype), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -427,9 +430,9 @@ def cross_attn_apply(params, x, enc_out, cfg, ncfg):
     B, S, d = x.shape
     Se = enc_out.shape[1]
     H, hd = cfg.n_heads, cfg.resolved_head_dim
-    q = nmatmul(x, params["wq"], ncfg).reshape(B, S, H, hd)
-    k = nmatmul(enc_out, params["wk"], ncfg).reshape(B, Se, H, hd)
-    v = nmatmul(enc_out, params["wv"], ncfg).reshape(B, Se, H, hd)
+    q = nmatmul(x, params["wq"], ncfg, path="wq").reshape(B, S, H, hd)
+    k = nmatmul(enc_out, params["wk"], ncfg, path="wk").reshape(B, Se, H, hd)
+    v = nmatmul(enc_out, params["wv"], ncfg, path="wv").reshape(B, Se, H, hd)
     out = blockwise_attention(q, k, v, causal=False)
     out = out.astype(x.dtype).reshape(B, S, H * hd)
-    return nmatmul(out, params["wo"], ncfg).astype(x.dtype)
+    return nmatmul(out, params["wo"], ncfg, path="wo").astype(x.dtype)

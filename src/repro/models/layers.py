@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.numerics import NumericsConfig, nmatmul
+from repro.core.policy import Numerics
 
 
 class PP:
@@ -157,16 +158,18 @@ def mlp_init(key, d, ff):
     }
 
 
-def mlp_apply(params, x, ncfg: NumericsConfig):
+def mlp_apply(params, x, ncfg: Numerics):
+    """Gated MLP; ``ncfg`` may be a config or a policy scoped to this MLP
+    (relative paths ``wi``/``wg``/``wo``)."""
     from repro.distributed.sharding import logical_constraint
 
     hidden_axes = ("batch",) + (None,) * (x.ndim - 2) + ("mlp",)
-    h = nmatmul(x, params["wi"], ncfg)
-    g = nmatmul(x, params["wg"], ncfg)
+    h = nmatmul(x, params["wi"], ncfg, path="wi")
+    g = nmatmul(x, params["wg"], ncfg, path="wg")
     h = logical_constraint(h, hidden_axes)
     g = logical_constraint(g, hidden_axes)
     h = h * jax.nn.silu(g)
-    return nmatmul(h.astype(x.dtype), params["wo"], ncfg)
+    return nmatmul(h.astype(x.dtype), params["wo"], ncfg, path="wo")
 
 
 def softcap(x, cap):

@@ -20,6 +20,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.numerics import NumericsConfig, nmatmul
+from repro.core.policy import Numerics, scoped
 from repro.distributed.sharding import (current_mesh_rules, logical_constraint,
                                         spec_for)
 
@@ -42,8 +43,14 @@ def moe_init(key, cfg):
     return p
 
 
-def moe_apply(params, x, cfg, ncfg: NumericsConfig):
+def moe_apply(params, x, cfg, ncfg: Numerics):
     """x: (B, S, D) -> (B, S, D).
+
+    ``ncfg`` may be a policy view scoped to this block's ``mlp`` prefix;
+    the shared (always-on) expert resolves under the relative ``shared.*``
+    paths.  Routed-expert einsums and the router run exact (routing is
+    control logic; the dense expert slab multiply stays on the digital
+    datapath in the CiM deployment model).
 
     Two implementations:
     * **shard_map EP** (used whenever a mesh context with a 'model' axis
@@ -143,7 +150,8 @@ def _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules):
     )(x, params["router"], params["wi"], params["wg"], params["wo"])
 
     if "shared" in params:
-        y = y + mlp_apply(params["shared"], x.reshape(-1, D), ncfg).astype(
+        y = y + mlp_apply(params["shared"], x.reshape(-1, D),
+                          scoped(ncfg, "shared")).astype(
             x.dtype).reshape(B, S, D)
     return y
 
@@ -211,7 +219,8 @@ def _moe_apply_gspmd(params, x, cfg, ncfg: NumericsConfig):
     y = jax.vmap(combine_group)(out_buf, inv, gate)      # (B, S, D)
 
     if "shared" in params:
-        y = y + mlp_apply(params["shared"], x.reshape(-1, D), ncfg).astype(
+        y = y + mlp_apply(params["shared"], x.reshape(-1, D),
+                          scoped(ncfg, "shared")).astype(
             x.dtype).reshape(B, S, D)
     return y
 

@@ -1,24 +1,29 @@
 """ResNet-18 (CIFAR variant) — the paper's Table IV workload.
 
 Convolutions route through the numerics config: ``exact`` mode uses the
-native convolution; ``emulated`` mode lowers each conv to im2col + the
-bit-level approximate matmul (every scalar product goes through the
-selected multiplier — the paper's §IV-C methodology: train exactly, infer
-approximately).  BatchNorm statistics are part of a separate ``state``
-tree (train mode updates them; inference uses the running stats, fused
-into scale/shift so no multipliers are spent on normalization).
+native convolution; approximate modes lower each conv to im2col + the
+numerics-aware matmul (``emulated``: every scalar product goes through the
+bit-level multiplier — the paper's §IV-C methodology: train exactly, infer
+approximately; ``segmented``: the split-float TPU analogue).  BatchNorm
+statistics are part of a separate ``state`` tree (train mode updates them;
+inference uses the running stats, fused into scale/shift so no multipliers
+are spent on normalization).
+
+``ResNetConfig.numerics`` may be a per-layer :class:`NumericsPolicy`
+(``repro.core.policy``); layer paths are ``stem``,
+``s{stage}b{block}.{conv1,conv2,proj}`` and ``fc`` (see
+:func:`layer_paths`), which is what ``repro.core.sweep.auto_configure``
+assigns per-layer designs against.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.afpm import AFPMConfig, afpm_matmul_emulated
 from repro.core.numerics import NumericsConfig, nmatmul
-from repro.core.registry import get_multiplier
+from repro.core.policy import Numerics, resolve
 
 from .layers import PP, normal
 
@@ -28,7 +33,22 @@ class ResNetConfig:
     num_classes: int = 10
     widths: tuple = (64, 128, 256, 512)
     blocks: tuple = (2, 2, 2, 2)
-    numerics: NumericsConfig = NumericsConfig(mode="exact", compute_dtype="float32")
+    numerics: Numerics = NumericsConfig(mode="exact", compute_dtype="float32")
+
+
+def layer_paths(cfg: ResNetConfig) -> list:
+    """All policy paths of this network, execution order (for auto-config)."""
+    paths = ["stem"]
+    cin = cfg.widths[0]
+    for si, (w, n) in enumerate(zip(cfg.widths, cfg.blocks)):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            paths += [f"s{si}b{bi}.conv1", f"s{si}b{bi}.conv2"]
+            if stride != 1 or cin != w:
+                paths.append(f"s{si}b{bi}.proj")
+            cin = w
+    paths.append("fc")
+    return paths
 
 
 def conv_init(key, kh, kw, cin, cout):
@@ -48,8 +68,9 @@ def bn_state_init(c):
     return {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
 
 
-def conv2d(x, w, stride=1, numerics: NumericsConfig | None = None):
-    """NHWC conv; approximate numerics use im2col + the emulated multiplier."""
+def conv2d(x, w, stride=1, numerics: Numerics | None = None, path: str = ""):
+    """NHWC conv; approximate numerics use im2col + the numerics matmul."""
+    numerics = resolve(numerics, path) if numerics is not None else None
     if numerics is None or numerics.mode == "exact":
         return jax.lax.conv_general_dilated(
             x, w, (stride, stride), "SAME",
@@ -71,13 +92,8 @@ def conv2d(x, w, stride=1, numerics: NumericsConfig | None = None):
                    j:j + (Wo - 1) * stride + 1:stride, :])
     cols = jnp.concatenate(patches, axis=-1).reshape(B * Ho * Wo, kh * kw * cin)
     wmat = w.reshape(kh * kw * cin, cout)
-    name = numerics.multiplier.lower()
-    if name.startswith(("ac", "acl")) and not name.startswith("ac-"):
-        out = afpm_matmul_emulated(cols, wmat, numerics.afpm())
-    else:
-        from repro.core.numerics import _generic_emulated_matmul
-
-        out = _generic_emulated_matmul(cols, wmat, get_multiplier(numerics.multiplier))
+    # one audited entry point for emulated AND segmented approximate convs
+    out = nmatmul(cols, wmat, numerics)
     return out.reshape(B, Ho, Wo, cout)
 
 
@@ -131,13 +147,16 @@ def init(cfg: ResNetConfig, key):
     return params, state
 
 
-def _block_apply(p, s, x, stride, cfg, train):
-    h, s1 = batchnorm(p["bn1"], s["bn1"], conv2d(x, p["conv1"], stride, cfg.numerics), train)
+def _block_apply(p, s, x, stride, cfg, train, path=""):
+    num = cfg.numerics
+    h, s1 = batchnorm(p["bn1"], s["bn1"],
+                      conv2d(x, p["conv1"], stride, num, f"{path}.conv1"), train)
     h = jax.nn.relu(h)
-    h, s2 = batchnorm(p["bn2"], s["bn2"], conv2d(h, p["conv2"], 1, cfg.numerics), train)
+    h, s2 = batchnorm(p["bn2"], s["bn2"],
+                      conv2d(h, p["conv2"], 1, num, f"{path}.conv2"), train)
     if "proj" in p:
         x, s3 = batchnorm(p["bn_proj"], s["bn_proj"],
-                          conv2d(x, p["proj"], stride, cfg.numerics), train)
+                          conv2d(x, p["proj"], stride, num, f"{path}.proj"), train)
         new_s = {"bn1": s1, "bn2": s2, "bn_proj": s3}
     else:
         new_s = {"bn1": s1, "bn2": s2}
@@ -149,27 +168,17 @@ def apply(params, state, x, cfg: ResNetConfig, train: bool = False):
     new_state = {}
     h, new_state["bn_stem"] = batchnorm(
         params["bn_stem"], state["bn_stem"],
-        conv2d(x, params["stem"], 1, cfg.numerics), train)
+        conv2d(x, params["stem"], 1, cfg.numerics, "stem"), train)
     h = jax.nn.relu(h)
     for si, (w, n) in enumerate(zip(cfg.widths, cfg.blocks)):
         for bi in range(n):
             stride = 2 if (si > 0 and bi == 0) else 1
             h, s = _block_apply(params[f"s{si}b{bi}"], state[f"s{si}b{bi}"],
-                                h, stride, cfg, train)
+                                h, stride, cfg, train, path=f"s{si}b{bi}")
             new_state[f"s{si}b{bi}"] = s
     h = h.mean(axis=(1, 2))
     # final classifier also goes through the configured multiplier
-    if cfg.numerics.mode == "exact":
-        logits = h @ params["fc"]
-    else:
-        name = cfg.numerics.multiplier.lower()
-        if name.startswith(("ac", "acl")) and not name.startswith("ac-"):
-            logits = afpm_matmul_emulated(h, params["fc"], cfg.numerics.afpm())
-        else:
-            from repro.core.numerics import _generic_emulated_matmul
-
-            logits = _generic_emulated_matmul(h, params["fc"],
-                                              get_multiplier(cfg.numerics.multiplier))
+    logits = nmatmul(h, params["fc"], resolve(cfg.numerics, "fc"))
     return logits + params["fc_b"], new_state
 
 

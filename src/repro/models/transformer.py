@@ -27,6 +27,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.numerics import nmatmul
+from repro.core.policy import is_policy, resolve, scoped
 from repro.distributed.sharding import logical_constraint
 
 from . import attention as attn
@@ -62,11 +64,17 @@ def block_init(key, cfg, spec):
 
 def block_apply(params, x, cfg, spec, positions, ncfg, mode, cache=None,
                 q_offset=0, causal=True, enc=None):
-    """Returns (x, new_cache_or_None)."""
+    """Returns (x, new_cache_or_None).
+
+    ``ncfg`` is a NumericsConfig or a policy view already scoped to this
+    block (e.g. ``blocks.7``); submodules resolve under the relative
+    ``attn`` / ``cross`` / ``mlp`` / ``ssm`` prefixes (see
+    ``repro.core.policy`` for the full path table).
+    """
     if spec.kind == "ssm":
         h = rmsnorm(params["ln1"], x, cfg.norm_eps)
         h, new_cache = ssm_mod.ssm_apply(
-            params["ssm"], h, cfg, ncfg, cache=cache,
+            params["ssm"], h, cfg, scoped(ncfg, "ssm"), cache=cache,
             want_state=(mode == "prefill"),
         )
         x = logical_constraint(x + h, ("batch", "seq", None))
@@ -75,26 +83,70 @@ def block_apply(params, x, cfg, spec, positions, ncfg, mode, cache=None,
     new_cache = None
     if "attn" in params:
         h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        a_ncfg = scoped(ncfg, "attn")
         if spec.attn == "mla":
             h, new_cache = attn.mla_apply(params["attn"], h, cfg, spec, positions,
-                                          ncfg, cache=cache, q_offset=q_offset)
+                                          a_ncfg, cache=cache, q_offset=q_offset)
         else:
             h, new_cache = attn.gqa_apply(params["attn"], h, cfg, spec, positions,
-                                          ncfg, cache=cache, q_offset=q_offset,
+                                          a_ncfg, cache=cache, q_offset=q_offset,
                                           causal=causal)
         x = logical_constraint(x + h, ("batch", "seq", None))
         if mode == "train":
             new_cache = None
     if "cross" in params and enc is not None:
         h = rmsnorm(params["ln_cross"], x, cfg.norm_eps)
-        x = x + attn.cross_attn_apply(params["cross"], h, enc, cfg, ncfg)
+        x = x + attn.cross_attn_apply(params["cross"], h, enc, cfg,
+                                      scoped(ncfg, "cross"))
     h = rmsnorm(params["ln2"], x, cfg.norm_eps)
     if spec.kind == "moe":
-        h = moe_mod.moe_apply(params["mlp"], h, cfg, ncfg)
+        h = moe_mod.moe_apply(params["mlp"], h, cfg, scoped(ncfg, "mlp"))
     else:
-        h = mlp_apply(params["mlp"], h, ncfg).astype(x.dtype)
+        h = mlp_apply(params["mlp"], h, scoped(ncfg, "mlp")).astype(x.dtype)
     x = logical_constraint(x + h, ("batch", "seq", None))
     return x, new_cache
+
+
+def block_numerics_sites(cfg, spec):
+    """Relative resolution paths inside one block (every nmatmul call site
+    plus the SSM scan's backend lookup) — the probe set the scan-vs-unroll
+    decision in :func:`stack_apply` checks a policy against."""
+    if spec.kind == "ssm":
+        return ("ssm.in_proj", "ssm.out_proj", "ssm.scan")
+    sites = []
+    if spec.attn == "mla":
+        sites += ["attn.wq_a", "attn.wq_b", "attn.wkv_a", "attn.wo"]
+    elif spec.attn != "none":
+        sites += ["attn.wq", "attn.wk", "attn.wv", "attn.wo"]
+    if cfg.encoder_layers:
+        sites += ["cross.wq", "cross.wk", "cross.wv", "cross.wo"]
+    if spec.kind == "moe":
+        # routed experts run exact einsums; only the always-on shared
+        # expert (when configured) has policy-resolvable matmul sites
+        if cfg.moe is not None and cfg.moe.n_shared:
+            sites += ["mlp.shared.wi", "mlp.shared.wg", "mlp.shared.wo"]
+    else:
+        sites += ["mlp.wi", "mlp.wg", "mlp.wo"]
+    return tuple(sites)
+
+
+def _segment_scannable(ncfg, cfg, pattern, offset, repeats):
+    """True if all repeats of a segment resolve to identical numerics.
+
+    ``jax.lax.scan`` traces its body once, so per-repeat configs can only
+    differ if the segment is unrolled; this probe decides which.  Plain
+    configs and single-repeat segments are trivially scannable.
+    """
+    if not is_policy(ncfg) or repeats == 1:
+        return True
+    P = len(pattern)
+    for pi, spec in enumerate(pattern):
+        for site in block_numerics_sites(cfg, spec):
+            resolved = {resolve(ncfg, f"blocks.{offset + r * P + pi}.{site}")
+                        for r in range(repeats)}
+            if len(resolved) > 1:
+                return False
+    return True
 
 
 # ---------------------------------------------------------------------------
@@ -185,38 +237,74 @@ def stack_params_init(cfg, key):
 
 def stack_apply(params, x, cfg, ncfg, positions, mode, caches=None,
                 q_offset=0, causal=True, enc=None):
-    """Run all segments.  Returns (x, new_caches list-of-dicts or None)."""
+    """Run all segments.  Returns (x, new_caches list-of-dicts or None).
+
+    ``ncfg`` may be a NumericsConfig (one global setting, the pre-policy
+    behaviour) or a NumericsPolicy: block ``(r, pi)`` of segment ``si``
+    resolves under ``blocks.{global_layer_index}``.  Scanned segments whose
+    repeats resolve to different configs are transparently unrolled (each
+    repeat traces its own numerics); segments uniform under the policy keep
+    the compile-time-flat scan.
+    """
     collect = mode != "train"
     new_caches = []
+    layer_offset = 0
     for si, (repeats, pattern) in enumerate(cfg.segments):
+        P = len(pattern)
         seg_caches = caches[si] if caches is not None else {}
         stacked = {pi: params[f"seg{si}_p{pi}"]
                    for pi, spec in enumerate(pattern) if not spec.shared}
         shared = {pi: params[f"seg{si}_p{pi}"]
                   for pi, spec in enumerate(pattern) if spec.shared}
 
-        def seg_body(x, xs, _pattern=pattern, _shared=shared):
-            layer_params, layer_caches = xs
+        def seg_body_at(base, x, layer_params, layer_caches,
+                        _pattern=pattern, _shared=shared):
             out_caches = {}
             for pi, spec in enumerate(_pattern):
                 p = _shared[pi] if spec.shared else layer_params[pi]
                 c = layer_caches.get(pi)
-                x, nc = block_apply(p, x, cfg, spec, positions, ncfg, mode,
+                x, nc = block_apply(p, x, cfg, spec, positions,
+                                    scoped(ncfg, f"blocks.{base + pi}"), mode,
                                     cache=c, q_offset=q_offset, causal=causal,
                                     enc=enc)
                 if nc is not None and collect:
                     out_caches[pi] = nc
             return x, out_caches
 
-        body = _remat(seg_body, cfg)
-        if repeats == 1:
-            take0 = lambda tree: jax.tree.map(lambda a: a[0], tree)
-            x, outc = body(x, ({pi: take0(v) for pi, v in stacked.items()},
-                               {pi: take0(v) for pi, v in seg_caches.items()}))
-            outc = {pi: jax.tree.map(lambda a: a[None], v) for pi, v in outc.items()}
+        take_r = lambda tree, r: jax.tree.map(lambda a: a[r], tree)
+        if _segment_scannable(ncfg, cfg, pattern, layer_offset, repeats):
+            # uniform numerics across repeats: scan (paths resolve with the
+            # segment's first global index — valid exactly because uniform)
+            def seg_body(x, xs, _base=layer_offset):
+                layer_params, layer_caches = xs
+                return seg_body_at(_base, x, layer_params, layer_caches)
+
+            body = _remat(seg_body, cfg)
+            if repeats == 1:
+                x, outc = body(x, ({pi: take_r(v, 0) for pi, v in stacked.items()},
+                                   {pi: take_r(v, 0) for pi, v in seg_caches.items()}))
+                outc = {pi: jax.tree.map(lambda a: a[None], v)
+                        for pi, v in outc.items()}
+            else:
+                x, outc = jax.lax.scan(body, x, (stacked, seg_caches))
         else:
-            x, outc = jax.lax.scan(body, x, (stacked, seg_caches))
+            # heterogeneous policy: unroll so each repeat traces its own
+            # numerics; caches re-stack to the scanned layout (leading
+            # repeats axis) so prefill/decode consumers see one format
+            per_repeat = []
+            for r in range(repeats):
+                def one_repeat(x, xs, _base=layer_offset + r * P):
+                    return seg_body_at(_base, x, xs[0], xs[1])
+
+                x, oc = _remat(one_repeat, cfg)(
+                    x, ({pi: take_r(v, r) for pi, v in stacked.items()},
+                        {pi: take_r(v, r) for pi, v in seg_caches.items()}))
+                per_repeat.append(oc)
+            outc = {pi: jax.tree.map(lambda *a: jnp.stack(a),
+                                     *[oc[pi] for oc in per_repeat])
+                    for pi in (per_repeat[0] if per_repeat else {})}
         new_caches.append(outc if collect else {})
+        layer_offset += repeats * P
     return x, (new_caches if collect else None)
 
 
@@ -274,11 +362,16 @@ def backbone(params, cfg, batch, mode, caches=None, q_offset=0, enc=None):
 
 def logits_fn(params, cfg, hidden):
     w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
-    logits = jax.lax.dot_general(
-        hidden.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
-        (((hidden.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    if is_policy(cfg.numerics):
+        # the unembedding participates in per-layer policies as ``lm_head``
+        # (a policy default of exact/bf16 reproduces the legacy head)
+        logits = nmatmul(hidden, w, resolve(cfg.numerics, "lm_head"))
+    else:
+        logits = jax.lax.dot_general(
+            hidden.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+            (((hidden.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
     if cfg.tie_embeddings:
         # the tied table has unit-variance rows (embed_init scale=1.0), so
         # match the untied head's d**-0.5 init: logits start at unit scale
@@ -380,7 +473,10 @@ def encoder_apply(params, cfg, batch, ncfg):
     spec = _enc_spec(cfg)
 
     def body(x, layer_params):
-        x, _ = block_apply(layer_params, x, cfg, spec, positions, ncfg,
+        # encoder layers scan with one trace, so rules cannot distinguish
+        # them: all resolve under the unindexed ``encoder.blocks`` prefix
+        x, _ = block_apply(layer_params, x, cfg, spec, positions,
+                           scoped(ncfg, "encoder.blocks"),
                            mode="train", causal=False)
         return x, {}
 

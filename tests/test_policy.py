@@ -1,0 +1,318 @@
+"""Per-layer numerics policies: rules/globs/precedence, JSON round-trip,
+mixed-policy model forwards (scan + unroll paths), and the budget-driven
+auto-configurer."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import sweep
+from repro.core.metrics import mred
+from repro.core.numerics import EXACT, NumericsConfig, nmatmul
+from repro.core.policy import (NumericsPolicy, PolicyRule, is_policy, resolve,
+                               scoped)
+from repro.models import resnet, transformer
+from repro.models.layers import unzip
+
+SEG1 = NumericsConfig(mode="segmented", seg_passes=1, backend="xla")
+SEG3 = NumericsConfig(mode="segmented", seg_passes=3, backend="xla")
+EXACT_F32 = NumericsConfig(mode="exact", compute_dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# rule matching / precedence / scoping
+# ---------------------------------------------------------------------------
+
+def test_glob_matching_and_default():
+    pol = NumericsPolicy((PolicyRule("blocks.*.attn.*", SEG1),), default=EXACT_F32)
+    assert pol.lookup("blocks.3.attn.wq") == SEG1
+    assert pol.lookup("blocks.11.attn.wo") == SEG1
+    assert pol.lookup("blocks.3.mlp.wi") == EXACT_F32      # default
+    assert pol.lookup("lm_head") == EXACT_F32
+
+
+def test_first_matching_rule_wins():
+    pol = NumericsPolicy((
+        PolicyRule("blocks.0.attn.wq", SEG3),   # specific first
+        PolicyRule("blocks.*", SEG1),           # broad later
+    ))
+    assert pol.lookup("blocks.0.attn.wq") == SEG3
+    assert pol.lookup("blocks.0.attn.wk") == SEG1
+    # reversed order: the broad rule shadows the specific one
+    rev = NumericsPolicy((PolicyRule("blocks.*", SEG1),
+                          PolicyRule("blocks.0.attn.wq", SEG3)))
+    assert rev.lookup("blocks.0.attn.wq") == SEG1
+
+
+def test_star_crosses_dots():
+    pol = NumericsPolicy((PolicyRule("blocks.*.wo", SEG1),))
+    assert pol.lookup("blocks.7.attn.wo") == SEG1
+
+
+def test_rules_accept_bare_pairs():
+    pol = NumericsPolicy((("mlp.*", SEG1),))
+    assert pol.rules[0] == PolicyRule("mlp.*", SEG1)
+
+
+def test_scoping_prefixes_lookups():
+    pol = NumericsPolicy((PolicyRule("blocks.2.mlp.wi", SEG1),), default=EXACT_F32)
+    view = pol.scope("blocks.2").scope("mlp")
+    assert view.lookup("wi") == SEG1
+    assert view.lookup("wo") == EXACT_F32
+    assert is_policy(view) and is_policy(pol) and not is_policy(SEG1)
+
+
+def test_resolve_and_scoped_helpers_passthrough():
+    # plain configs flow through untouched (pre-policy call sites unchanged)
+    assert resolve(SEG1, "anything") == SEG1
+    assert resolve(None) == EXACT
+    assert scoped(SEG1, "blocks.0") is SEG1
+    pol = NumericsPolicy((PolicyRule("a.b", SEG1),))
+    assert resolve(scoped(pol, "a"), "b") == SEG1
+
+
+def test_nmatmul_resolves_policy_per_path():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    pol = NumericsPolicy((PolicyRule("approx", SEG1),), default=EXACT_F32)
+    exact = np.asarray(nmatmul(x, w, pol, path="other"))
+    approx = np.asarray(nmatmul(x, w, pol, path="approx"))
+    np.testing.assert_allclose(exact, np.asarray(x) @ np.asarray(w), rtol=1e-5)
+    assert not np.allclose(exact, approx)
+    np.testing.assert_array_equal(approx, np.asarray(nmatmul(x, w, SEG1)))
+
+
+# ---------------------------------------------------------------------------
+# JSON serialization
+# ---------------------------------------------------------------------------
+
+def test_policy_json_round_trip():
+    pol = NumericsPolicy((
+        PolicyRule("blocks.*.attn.*", NumericsConfig(mode="exact")),
+        PolicyRule("blocks.*.mlp.*", SEG1),
+        PolicyRule("fc", NumericsConfig(mode="emulated", multiplier="AC4-4",
+                                        seg_n=4)),
+    ), default=EXACT_F32)
+    text = pol.to_json()
+    assert NumericsPolicy.from_json(text) == pol
+    # the wire format is plain JSON with the documented shape
+    d = json.loads(text)
+    assert set(d) == {"default", "rules"}
+    assert d["rules"][1]["pattern"] == "blocks.*.mlp.*"
+    assert d["rules"][1]["config"]["seg_passes"] == 1
+
+
+def test_policy_json_partial_configs_take_defaults():
+    pol = NumericsPolicy.from_json(
+        '{"rules": [{"pattern": "x", "config": {"mode": "segmented"}}]}')
+    assert pol.lookup("x") == NumericsConfig(mode="segmented")
+    assert pol.default == EXACT
+
+
+def test_policy_json_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown NumericsConfig fields"):
+        NumericsPolicy.from_json(
+            '{"rules": [{"pattern": "x", "config": {"use_pallas": true}}]}')
+    with pytest.raises(ValueError, match="unknown backend"):
+        NumericsPolicy.from_json('{"default": {"backend": "cuda"}}')
+
+
+# ---------------------------------------------------------------------------
+# transformer forwards under policies
+# ---------------------------------------------------------------------------
+
+class _SpyPolicy(NumericsPolicy):
+    """Records every resolved (path, config) — proves distinct numerics
+    actually run inside one forward pass."""
+
+    def __post_init__(self):
+        super().__post_init__()
+        object.__setattr__(self, "seen", [])
+
+    def lookup(self, path):
+        cfg = super().lookup(path)
+        self.seen.append((path, cfg))
+        return cfg
+
+
+def _lm_setup(arch="qwen3-4b", B=2, S=16, seed=0):
+    cfg = get_arch(arch).reduced()
+    pp = transformer.init(cfg, jax.random.PRNGKey(seed))
+    params, _ = unzip(pp)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, (B, S + 1))
+    batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "targets": jnp.asarray(toks[:, 1:], jnp.int32)}
+    return cfg, params, batch
+
+
+def test_uniform_policy_matches_global_config():
+    """A policy resolving every site to one config == that global config."""
+    cfg, params, batch = _lm_setup()
+    h_global, _, _ = transformer.backbone(
+        params, dataclasses.replace(cfg, numerics=SEG1), batch, mode="train")
+    pol = NumericsPolicy((PolicyRule("blocks.*", SEG1),
+                          PolicyRule("lm_head", SEG1)), default=SEG1)
+    h_policy, _, _ = transformer.backbone(
+        params, dataclasses.replace(cfg, numerics=pol), batch, mode="train")
+    np.testing.assert_array_equal(np.asarray(h_global), np.asarray(h_policy))
+
+
+def test_mixed_policy_runs_two_numerics_in_one_forward():
+    """Acceptance: >= 2 distinct configs demonstrably run in ONE pass."""
+    cfg, params, batch = _lm_setup()
+    pol = _SpyPolicy((PolicyRule("blocks.*.attn.*", EXACT_F32),
+                      PolicyRule("blocks.*.mlp.*", SEG1)), default=EXACT_F32)
+    cfg_p = dataclasses.replace(cfg, numerics=pol)
+    h_mixed, _, _ = transformer.backbone(params, cfg_p, batch, mode="train")
+    used = {c for _, c in pol.seen}
+    assert SEG1 in used and EXACT_F32 in used, used
+    attn_sites = {p for p, c in pol.seen if ".attn." in p}
+    assert all(c == EXACT_F32 for p, c in pol.seen if ".attn." in p)
+    assert all(c == SEG1 for p, c in pol.seen if ".mlp." in p)
+    assert attn_sites, "no attention sites resolved"
+    # and the mixture is numerically distinct from either endpoint
+    h_ex, _, _ = transformer.backbone(
+        params, dataclasses.replace(cfg, numerics=EXACT_F32), batch, mode="train")
+    h_sg, _, _ = transformer.backbone(
+        params, dataclasses.replace(cfg, numerics=SEG1), batch, mode="train")
+    assert not np.allclose(np.asarray(h_mixed), np.asarray(h_ex))
+    assert not np.allclose(np.asarray(h_mixed), np.asarray(h_sg))
+
+
+def test_segment_scannable_probe():
+    cfg, _, _ = _lm_setup()
+    (repeats, pattern), = cfg.segments
+    assert repeats >= 2, "needs a scanned segment"
+    role = NumericsPolicy((PolicyRule("blocks.*.mlp.*", SEG1),))
+    assert transformer._segment_scannable(role, cfg, pattern, 0, repeats)
+    hetero = NumericsPolicy((PolicyRule("blocks.0.*", SEG1),))
+    assert not transformer._segment_scannable(hetero, cfg, pattern, 0, repeats)
+    # per-index rules that resolve identically stay scannable
+    same = NumericsPolicy((PolicyRule("blocks.0.*", SEG1),
+                           PolicyRule("blocks.1.*", SEG1)), default=SEG1)
+    assert transformer._segment_scannable(same, cfg, pattern, 0, repeats)
+
+
+def test_heterogeneous_segment_unrolls_and_matches_manual_reference():
+    """blocks.0 on segmented-1, blocks.1 exact — the scanned segment must
+    unroll, and equal running the two blocks by hand with those configs."""
+    cfg, params, batch = _lm_setup()
+    (repeats, pattern), = cfg.segments
+    spec = pattern[0]
+    pol = NumericsPolicy((PolicyRule("blocks.0.*", SEG1),), default=EXACT_F32)
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None], (2, 8))
+    out_policy, _ = transformer.stack_apply(params, x, cfg, pol, positions,
+                                            mode="train")
+    # manual: apply each repeat's params with its resolved plain config
+    ref = x
+    for r, ncfg in enumerate([SEG1] + [EXACT_F32] * (repeats - 1)):
+        layer = jax.tree.map(lambda a: a[r], params["seg0_p0"])
+        ref, _ = transformer.block_apply(layer, ref, cfg, spec, positions,
+                                         ncfg, mode="train")
+    np.testing.assert_allclose(np.asarray(out_policy), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_policy_prefill_decode_consistency():
+    """Decode under a heterogeneous policy matches prefill's next-token
+    logits (the unrolled cache layout matches the scanned one)."""
+    cfg, params, batch = _lm_setup(S=12)
+    pol = NumericsPolicy((PolicyRule("blocks.0.*", SEG1),), default=EXACT_F32)
+    cfg_p = dataclasses.replace(cfg, numerics=pol)
+    toks = batch["tokens"]
+    logits_full, _, _ = transformer.backbone(params, cfg_p, {"tokens": toks},
+                                             mode="train")
+    logits_full = transformer.logits_fn(params, cfg_p, logits_full)
+    lg_prefill, state = transformer.prefill(params, cfg_p,
+                                            {"tokens": toks[:, :-1]},
+                                            max_len=toks.shape[1] + 1)
+    lg_decode, _ = transformer.decode_step(params, cfg_p,
+                                           {"token": toks[:, -1:]},
+                                           state, toks.shape[1] - 1)
+    np.testing.assert_allclose(np.asarray(lg_decode[:, 0]),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# resnet + auto-configuration
+# ---------------------------------------------------------------------------
+
+def _tiny_resnet(seed=0):
+    cfg = resnet.ResNetConfig(widths=(8, 16), blocks=(1, 1))
+    pp, state = resnet.init(cfg, jax.random.PRNGKey(seed))
+    params, _ = unzip(pp)
+    rng = np.random.default_rng(seed)
+    images = jnp.asarray(rng.standard_normal((4, 8, 8, 3)), jnp.float32)
+    return cfg, params, state, images
+
+
+def test_resnet_layer_paths_cover_all_convs():
+    cfg = resnet.ResNetConfig(widths=(8, 16), blocks=(1, 1))
+    assert resnet.layer_paths(cfg) == [
+        "stem", "s0b0.conv1", "s0b0.conv2",
+        "s1b0.conv1", "s1b0.conv2", "s1b0.proj", "fc"]
+
+
+def test_resnet_mixed_policy_forward():
+    cfg, params, state, images = _tiny_resnet()
+    ref, _ = resnet.apply(params, state, images, cfg, train=False)
+    pol = NumericsPolicy((PolicyRule("s1b0.*", SEG1),), default=EXACT_F32)
+    got, _ = resnet.apply(params, state, images,
+                          dataclasses.replace(cfg, numerics=pol), train=False)
+    assert np.isfinite(np.asarray(got)).all()
+    assert not np.allclose(np.asarray(ref), np.asarray(got))
+
+
+def test_auto_configure_meets_budget_below_exact_area():
+    """Acceptance: the emitted policy meets the MRED budget at lower
+    modeled area than the all-exact baseline, and round-trips via JSON."""
+    cfg, params, state, images = _tiny_resnet()
+    ref, _ = resnet.apply(params, state, images, cfg, train=False)
+    ref = np.asarray(ref, np.float64)
+
+    def eval_fn(policy):
+        acfg = dataclasses.replace(cfg, numerics=policy)
+        logits, _ = resnet.apply(params, state, images, acfg, train=False)
+        return mred(np.asarray(logits), ref)
+
+    budget = 5e-3
+    res = sweep.auto_configure(eval_fn, resnet.layer_paths(cfg), budget,
+                               candidates=[("segmented-1", SEG1),
+                                           ("segmented-3", SEG3)])
+    assert res.error <= budget
+    assert res.area_um2 < res.baseline_area_um2
+    assert res.assignments  # at least one layer went approximate
+    # the reported error is reproducible from the serialized policy
+    reloaded = NumericsPolicy.from_json(res.policy.to_json())
+    assert reloaded == res.policy
+    assert eval_fn(reloaded) == pytest.approx(res.error)
+
+
+def test_auto_configure_area_model_orders_designs():
+    # ACL-like (1 pass) < AC-like (3 passes) < exact, as in paper Table II
+    a1 = sweep.config_ppa(SEG1).logic_area_um2
+    a3 = sweep.config_ppa(SEG3).logic_area_um2
+    ax = sweep.config_ppa(EXACT_F32).logic_area_um2
+    assert a1 < a3 < ax
+    # emulated designs use their Table II spec
+    ac55 = sweep.config_ppa(NumericsConfig(mode="emulated", multiplier="AC5-5"))
+    assert ac55.logic_area_um2 == pytest.approx(2156.0, rel=1e-6)
+
+
+def test_pareto_candidates_are_on_frontier():
+    cands = sweep.pareto_candidates(n_samples=10_000)
+    names = {n for n, _ in cands}
+    pareto = {p.name for p in sweep.sweep(n_samples=10_000) if p.pareto}
+    assert names == pareto
+    for _, c in cands:
+        assert c.mode == "emulated"

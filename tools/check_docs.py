@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Docs checker: intra-repo markdown link validation + fenced-example compilation.
+
+Two failure modes this guards against as the APIs evolve:
+
+1. broken intra-repo links — every relative ``[text](target)`` in the
+   checked markdown files must point at an existing file (``#anchor``
+   fragments are stripped; external ``http(s)://`` / ``mailto:`` links
+   are skipped);
+2. stale code examples — every fenced ```` ```python ```` block in
+   ``docs/`` is extracted and byte-compiled (``python -m compileall``
+   semantics via :func:`compile`), so syntax drift in examples fails CI.
+
+Usage: ``python tools/check_docs.py [--write-extracted DIR]``; exits
+non-zero on any problem.  Run by the ``docs`` job in
+``.github/workflows/ci.yml`` and by ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# files whose links are validated; python fences are compiled for docs/ only
+LINK_CHECKED = ["README.md", "ROADMAP.md"]
+DOCS_DIR = REPO / "docs"
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _label(md: Path) -> str:
+    try:
+        return str(md.relative_to(REPO))
+    except ValueError:
+        return str(md)
+
+
+def _md_files() -> list[Path]:
+    files = [REPO / f for f in LINK_CHECKED if (REPO / f).exists()]
+    files += sorted(DOCS_DIR.glob("**/*.md")) if DOCS_DIR.is_dir() else []
+    return files
+
+
+def check_links(md: Path) -> list[str]:
+    problems = []
+    text = md.read_text()
+    # ignore links inside code fences (command examples, not references)
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for target in _LINK_RE.findall(text):
+        if target.startswith(_EXTERNAL):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:  # pure in-page anchor
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            problems.append(f"{_label(md)}: broken link -> {target}")
+    return problems
+
+
+def check_fences(md: Path, write_dir: Path | None = None) -> list[str]:
+    problems = []
+    for i, src in enumerate(_FENCE_RE.findall(md.read_text())):
+        name = f"{_label(md)}:fence{i}"
+        if write_dir is not None:
+            out = write_dir / f"{md.stem}_fence{i}.py"
+            out.write_text(src)
+        try:
+            compile(src, name, "exec")
+        except SyntaxError as e:
+            problems.append(f"{name}: does not compile: {e}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write-extracted", metavar="DIR", default=None,
+                    help="also write extracted fences as .py files here "
+                         "(for python -m compileall)")
+    args = ap.parse_args(argv)
+    write_dir = None
+    if args.write_extracted:
+        write_dir = Path(args.write_extracted)
+        write_dir.mkdir(parents=True, exist_ok=True)
+
+    problems = []
+    n_links = n_fences = 0
+    for md in _md_files():
+        link_problems = check_links(md)
+        problems += link_problems
+        n_links += 1
+        if str(md).startswith(str(DOCS_DIR)):
+            problems += check_fences(md, write_dir)
+            n_fences += 1
+
+    for p in problems:
+        print(f"FAIL {p}", file=sys.stderr)
+    print(f"check_docs: {n_links} files link-checked, "
+          f"{n_fences} docs files fence-compiled, {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
