@@ -8,10 +8,12 @@ with every conv/fc product routed through the approximate multiplier
 of the multiplier itself plus Top-1 accuracy vs the exact baseline.
 
 ``--auto BUDGET`` additionally runs the per-layer auto-configurer
-(``repro.core.sweep.auto_configure``): a greedy sensitivity sweep over the
-network's layers against a calibration batch that emits a NumericsPolicy
-meeting the logits-MRED budget at minimum modeled area (``--out`` saves it
-as JSON for ``repro.launch.serve --policy``).
+(``repro.core.sweep.auto_configure``) against a calibration batch and
+emits a NumericsPolicy meeting the logits-MRED budget at minimum modeled
+area (``--out`` saves it as JSON for ``repro.launch.serve --policy``).
+``--method proxy`` (default) spends one instrumented calibration pass on
+the composed-error sensitivity model (``repro.core.sensitivity``);
+``--method greedy`` keeps the original measured-error sweep.
 """
 from __future__ import annotations
 
@@ -127,15 +129,21 @@ SEGMENTED_CANDIDATES = [
 
 
 def run_auto(budget=1e-2, train_steps=120, calib_n=32, candidates="segmented",
-             out=None):
+             out=None, method="proxy"):
     """Budget-driven per-layer configuration of the Table IV network.
 
     ``candidates='segmented'`` uses the fast split-float ladder (CPU-cheap
     calibration); ``'emulated'`` uses the bit-level Pareto-frontier designs
-    (paper-faithful, hours on one core).  Prints the chosen per-layer
-    assignment and the modeled-area saving vs the all-exact baseline.
+    (paper-faithful, hours on one core).  ``method='proxy'`` (default) fits
+    the composed-error sensitivity model in ONE calibration pass and solves
+    the assignment from the model; ``'greedy'`` re-measures the network per
+    candidate assignment (the original O(L x C) full-eval schedule).
+    Prints the chosen per-layer assignment and the modeled-area saving vs
+    the all-exact baseline; for the proxy, also the measured error of the
+    emitted policy (one verification eval, outside the configurator).
     """
-    print(f"\n== auto-configure: per-layer numerics under MRED <= {budget:g} ==")
+    print(f"\n== auto-configure[{method}]: per-layer numerics under "
+          f"MRED <= {budget:g} ==")
     cfg, params, state = train_resnet(steps=train_steps)
     dcfg = DataConfig(global_batch=calib_n, seed=123)
     calib = cifar_like(dcfg, 20_000, n=calib_n)
@@ -150,10 +158,14 @@ def run_auto(budget=1e-2, train_steps=120, calib_n=32, candidates="segmented",
 
     cand = SEGMENTED_CANDIDATES if candidates == "segmented" else None
     res = sweep.auto_configure(eval_fn, resnet.layer_paths(cfg), budget,
-                               candidates=cand, verbose=True)
-    print(f"[auto] error={res.error:.3e} (budget {budget:g})  "
+                               candidates=cand, verbose=True, method=method)
+    err_kind = "composed" if res.method == "proxy" else "measured"
+    print(f"[auto] {err_kind} error={res.error:.3e} (budget {budget:g})  "
           f"area {res.area_um2:,.0f} um^2 vs exact {res.baseline_area_um2:,.0f} "
           f"(-{res.area_reduction:.1%})  [{res.n_evals} calibration evals]")
+    if res.method == "proxy":
+        print(f"[auto] measured error of emitted policy: "
+              f"{eval_fn(res.policy):.3e}")
     for path, name in res.assignments:
         print(f"  {path:16s} -> {name}")
     if out:
@@ -171,11 +183,14 @@ if __name__ == "__main__":
                          "instead of the fixed Table IV grid")
     ap.add_argument("--candidates", choices=["segmented", "emulated"],
                     default="segmented")
+    ap.add_argument("--method", choices=["proxy", "greedy"], default="proxy",
+                    help="proxy: one calibration pass + composed-error model; "
+                         "greedy: full-network eval per candidate assignment")
     ap.add_argument("--out", default=None, help="write the policy JSON here")
     ap.add_argument("--train-steps", type=int, default=120)
     args = ap.parse_args()
     if args.auto is not None:
         run_auto(budget=args.auto, candidates=args.candidates, out=args.out,
-                 train_steps=args.train_steps)
+                 train_steps=args.train_steps, method=args.method)
     else:
         run()

@@ -70,6 +70,34 @@ class NumericsConfig:
 EXACT = NumericsConfig(mode="exact")
 
 
+# ---------------------------------------------------------------------------
+# calibration tap — the instrumented-pass hook for repro.core.sensitivity
+# ---------------------------------------------------------------------------
+# When a tap is installed, nmatmul reports (full layer path, x, w) for every
+# call site it executes with concrete (non-traced) operands; sites inside
+# jax.lax.scan / jit traces see tracers and are skipped, which is why the
+# sensitivity calibration pass forces policy-driven unrolling
+# (NumericsPolicy.force_unroll) and runs eagerly.
+_OPERAND_TAP = None
+
+
+def set_operand_tap(tap):
+    """Install (``tap(path, x, w)``) or clear (``tap=None``) the call-site
+    operand recorder; returns the previously installed tap so callers can
+    restore it (see ``repro.core.sensitivity.record_operands``)."""
+    global _OPERAND_TAP
+    prev = _OPERAND_TAP
+    _OPERAND_TAP = tap
+    return prev
+
+
+def operand_tap_active() -> bool:
+    """True while a calibration tap is installed — call sites that normally
+    bypass nmatmul for exact numerics (native convs, the fused routed-expert
+    einsum) must route through it so the pass records their operands."""
+    return _OPERAND_TAP is not None
+
+
 def segmented_matmul_xla(x, w, passes: int = 3):
     """Split-float approximate matmul (XLA reference; oracle for the kernel).
 
@@ -94,6 +122,12 @@ def nmatmul(x: jax.Array, w: jax.Array, cfg: Optional[NumericsConfig] = None,
     is resolved per call site from the layer ``path`` — this is what lets
     one forward pass run different numerics in different layers.
     """
+    if _OPERAND_TAP is not None and not (
+            isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer)):
+        # full path: a scoped policy knows its prefix; plain configs report
+        # the caller-supplied (relative) path verbatim
+        full = cfg.full_path(path) if hasattr(cfg, "full_path") else path
+        _OPERAND_TAP(full, x, w)
     if cfg is None:
         cfg = EXACT
     elif not isinstance(cfg, NumericsConfig):

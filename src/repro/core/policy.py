@@ -79,10 +79,19 @@ class PolicyRule:
 
 @dataclasses.dataclass(frozen=True)
 class NumericsPolicy:
-    """Ordered glob rules over layer paths; first match wins, else default."""
+    """Ordered glob rules over layer paths; first match wins, else default.
+
+    ``force_unroll`` (class attribute, False) is an escape hatch for the
+    sensitivity calibration pass: a policy subclass setting it True makes
+    ``transformer.stack_apply`` unroll every scanned segment so call sites
+    execute eagerly with concrete operands (the operand tap in
+    ``repro.core.numerics`` cannot record tracers).
+    """
 
     rules: Tuple[PolicyRule, ...] = ()
     default: NumericsConfig = EXACT
+
+    force_unroll = False
 
     def __post_init__(self):
         # accept any iterable of rules / (pattern, config) pairs
@@ -104,6 +113,11 @@ class NumericsPolicy:
     def scope(self, prefix: str) -> "ScopedPolicy":
         """View of this policy with ``prefix.`` prepended to every lookup."""
         return ScopedPolicy(self, prefix)
+
+    def full_path(self, path: str = "") -> str:
+        """The absolute layer path a relative ``path`` resolves under (the
+        root policy is unscoped, so this is the identity)."""
+        return path
 
     # -- construction helpers ----------------------------------------------
 
@@ -154,6 +168,13 @@ class ScopedPolicy:
 
     def scope(self, prefix: str) -> "ScopedPolicy":
         return ScopedPolicy(self.policy, _join(self.prefix, prefix))
+
+    def full_path(self, path: str = "") -> str:
+        return _join(self.prefix, path)
+
+    @property
+    def force_unroll(self) -> bool:
+        return self.policy.force_unroll
 
 
 Numerics = Union[NumericsConfig, NumericsPolicy, ScopedPolicy]
@@ -207,3 +228,16 @@ def scoped(ncfg: Numerics, *parts: str) -> Numerics:
         for p in parts:
             ncfg = ncfg.scope(p)
     return ncfg
+
+
+def expert_paths(n_experts: int, names: Sequence[str] = ("wi", "wg", "wo"),
+                 prefix: str = "") -> Tuple[str, ...]:
+    """Per-expert MoE call-site paths: ``expert{k}.{name}`` under ``prefix``.
+
+    Each routed expert is a separate weight slab — a separate multiplier
+    array instance in the CiM deployment model — so the PPA roll-up
+    (``repro.core.sweep.policy_area``) and the auto-configurer enumerate
+    every expert path individually rather than one path per MoE layer.
+    """
+    return tuple(_join(prefix, f"expert{k}.{name}")
+                 for k in range(n_experts) for name in names)

@@ -1,0 +1,184 @@
+"""Composed-error sensitivity model — one calibration pass, O(L) configuration.
+
+The greedy auto-configurer (``repro.core.sweep.auto_configure``,
+``method="greedy"``) re-evaluates the whole network once per candidate
+assignment: fine for ResNet-18-class calibration, intractable for the LM
+zoo.  This module replaces those full-network evaluations with a
+first-order error-composition model built from a **single instrumented
+calibration pass**:
+
+1. ``record_operands`` installs the operand tap in ``repro.core.numerics``;
+   one forward under the (default-only) calibration policy records, per
+   ``nmatmul`` call site, a bounded sample of its operand distribution and
+   the rms magnitude of its exact product.  Scanned transformer segments
+   are transparently unrolled for the pass (``NumericsPolicy.force_unroll``)
+   so every site executes eagerly with concrete operands.
+2. Per site, the **local error** of a candidate design is the MRED of the
+   recorded operand sample pushed through that design — no network in the
+   loop, just a tiny matmul per (site, candidate).
+3. Per site, a first-order **error-propagation coefficient** ``alpha``
+   maps call-site MRED into network-output error: under the unit-gain
+   residual-stream assumption, a relative perturbation of magnitude
+   ``delta`` injected at a site whose output rms is ``r`` arrives at the
+   network output (the last executed site: ``fc`` / ``lm_head``) as an
+   absolute perturbation ``delta * r``, i.e. a relative output error
+   ``delta * r / r_last`` — so ``alpha = out_rms / out_rms_last``.
+4. The **composed error** of an assignment is the linear first-order sum
+   ``sum_l alpha_l * delta_l`` — deliberately conservative versus an RSS
+   composition (independent per-site errors partially cancel), so the
+   prediction upper-bounds the typical measured error.
+
+The cross-validation tests (``tests/test_sensitivity.py``) pin the proxy
+against the greedy baseline on the ResNet-18 calibration setup, and the
+property tests (``tests/test_hypothesis_properties.py``) assert the
+composed prediction brackets measured network error within a stated
+factor on random layer stacks.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import mred
+from .numerics import EXACT, NumericsConfig, nmatmul, set_operand_tap
+from .policy import NumericsPolicy
+
+# bounded per-site operand sample: rows of x, columns of w (strided —
+# deterministic, so calibration and its golden fixtures are reproducible)
+MAX_ROWS = 64
+MAX_COLS = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteRecord:
+    """One call site's recorded operand distribution."""
+
+    path: str
+    x: np.ndarray          # (<=MAX_ROWS, K) float32 operand rows
+    w: np.ndarray          # (K, <=MAX_COLS) float32 weight columns
+    out_rms: float         # rms of the exact (float64) sample product
+    order: int             # execution order of the site's first call
+    calls: int = 1         # times the site was hit during the pass
+
+
+def _strided(n: int, limit: int) -> np.ndarray:
+    if n <= limit:
+        return np.arange(n)
+    return np.unique(np.linspace(0, n - 1, limit).astype(np.int64))
+
+
+@contextlib.contextmanager
+def record_operands(max_rows: int = MAX_ROWS, max_cols: int = MAX_COLS):
+    """Context manager: install the nmatmul operand tap, yield the store.
+
+    The store maps full layer path -> :class:`SiteRecord`.  Repeat calls
+    to the same path keep the first sample (one forward over a calibration
+    batch visits each site once; serving loops would revisit) and bump
+    ``calls``.  Sites reached with traced operands (inside scan/jit) are
+    invisible — run the pass eagerly with ``force_unroll``.
+    """
+    store: Dict[str, SiteRecord] = {}
+    order = [0]
+
+    def tap(path, x, w):
+        if getattr(w, "ndim", 0) != 2:
+            return
+        if path in store:
+            r = store[path]
+            store[path] = dataclasses.replace(r, calls=r.calls + 1)
+            return
+        x2 = np.asarray(x, np.float32).reshape(-1, x.shape[-1])
+        w2 = np.asarray(w, np.float32)
+        x2 = x2[_strided(x2.shape[0], max_rows)]
+        w2 = w2[:, _strided(w2.shape[1], max_cols)]
+        exact = x2.astype(np.float64) @ w2.astype(np.float64)
+        store[path] = SiteRecord(
+            path=path, x=x2, w=w2,
+            out_rms=float(np.sqrt(np.mean(exact * exact))),
+            order=order[0])
+        order[0] += 1
+
+    prev = set_operand_tap(tap)
+    try:
+        yield store
+    finally:
+        set_operand_tap(prev)
+
+
+def propagation_coefficients(store: Mapping[str, SiteRecord]) -> Dict[str, float]:
+    """First-order alpha per site: ``out_rms / out_rms(last site)``.
+
+    The last-executed site is the network head (``fc`` / ``lm_head``), so
+    its coefficient is exactly 1; upstream sites scale by how loud their
+    output is relative to the head's.
+    """
+    if not store:
+        return {}
+    last = max(store.values(), key=lambda r: r.order)
+    net_rms = max(last.out_rms, 1e-30)
+    return {p: r.out_rms / net_rms for p, r in store.items()}
+
+
+@dataclasses.dataclass
+class SensitivityModel:
+    """Per-site operand records + propagation coefficients + error cache."""
+
+    sites: Dict[str, SiteRecord]
+    alpha: Dict[str, float]
+    baseline_error: float = 0.0    # eval_fn under the default-only policy
+
+    def __post_init__(self):
+        self._local: Dict[Tuple[str, NumericsConfig], float] = {}
+
+    @classmethod
+    def from_store(cls, store: Mapping[str, SiteRecord],
+                   baseline_error: float = 0.0) -> "SensitivityModel":
+        return cls(dict(store), propagation_coefficients(store),
+                   baseline_error)
+
+    def local_error(self, path: str, cfg: NumericsConfig) -> float:
+        """MRED the design induces at ``path`` on its recorded operands."""
+        key = (path, cfg)
+        if key not in self._local:
+            r = self.sites[path]
+            exact = r.x.astype(np.float64) @ r.w.astype(np.float64)
+            approx = np.asarray(
+                nmatmul(jnp.asarray(r.x), jnp.asarray(r.w), cfg), np.float64)
+            self._local[key] = mred(approx, exact)
+        return self._local[key]
+
+    def contribution(self, path: str, cfg: NumericsConfig) -> float:
+        """Predicted network-output error contribution of one assignment."""
+        return self.alpha[path] * self.local_error(path, cfg)
+
+    def predict(self, assignments: Mapping[str, NumericsConfig]) -> float:
+        """Composed network error of a per-site assignment (first-order sum
+        over the assigned sites, on top of the baseline)."""
+        return self.baseline_error + sum(
+            self.contribution(p, c) for p, c in assignments.items()
+            if p in self.sites)
+
+
+class _CalibrationPolicy(NumericsPolicy):
+    """Default-only policy that forces scanned segments to unroll so the
+    operand tap sees concrete arrays at every call site."""
+
+    force_unroll = True
+
+
+def calibration_policy(default: Optional[NumericsConfig] = None) -> NumericsPolicy:
+    return _CalibrationPolicy((), default=default or EXACT)
+
+
+def calibrate(eval_fn, default: Optional[NumericsConfig] = None,
+              max_rows: int = MAX_ROWS, max_cols: int = MAX_COLS) -> SensitivityModel:
+    """One instrumented pass: run ``eval_fn`` under the default-only
+    calibration policy with the operand tap installed; returns the fitted
+    :class:`SensitivityModel` (``eval_fn`` is invoked exactly once)."""
+    with record_operands(max_rows, max_cols) as store:
+        base = float(eval_fn(calibration_policy(default)))
+    return SensitivityModel.from_store(store, baseline_error=base)

@@ -9,16 +9,28 @@ a configuration for an error budget.
 :func:`auto_configure` lifts the selection from one multiplier to a whole
 network (the OpenACMv2 accuracy-constrained co-optimization role): given a
 network-level error budget and an evaluation callback over a calibration
-batch, a greedy per-layer sensitivity sweep assigns each layer the
-cheapest design (by the same PPA model) whose cumulative network error
-stays within budget, and emits a serializable
-:class:`~repro.core.policy.NumericsPolicy`.
+batch, it assigns each layer the cheapest design (by the same PPA model)
+whose composed network error stays within budget, and emits a serializable
+:class:`~repro.core.policy.NumericsPolicy`.  Two methods:
+
+``method="proxy"`` (default)
+    One instrumented calibration pass fits the composed-error sensitivity
+    model (``repro.core.sensitivity``); the assignment is then solved as a
+    knapsack-style exchange over modeled per-site contributions —
+    O(layers x designs) local matmuls, exactly **one** ``eval_fn``
+    invocation.  Scales to the LM zoo.
+``method="greedy"``
+    The original schedule: probe each layer, then re-evaluate the whole
+    network per candidate assignment — O(layers x designs) *full-network*
+    evals.  Measured (not modeled) error; use it to cross-validate the
+    proxy on calibration-sized networks.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import re
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -112,9 +124,41 @@ def config_ppa(cfg: NumericsConfig) -> ppa.PPAEstimate:
     raise ValueError(f"unknown numerics mode {cfg.mode!r}")
 
 
-def policy_area(policy: NumericsPolicy, layer_paths: Sequence[str]) -> float:
-    """Modeled logic area (um^2) of one multiplier instance per layer."""
-    return sum(config_ppa(policy.lookup(p)).logic_area_um2 for p in layer_paths)
+def policy_area(policy: NumericsPolicy, layer_paths: Sequence[str],
+                counts: Optional[Mapping[str, int]] = None) -> float:
+    """Modeled logic area (um^2) of one multiplier instance per layer path.
+
+    ``counts`` weights paths by instance multiplicity (e.g. a path standing
+    for all experts of a MoE layer); per-expert path enumerations
+    (``repro.core.policy.expert_paths``, ``transformer.layer_paths``) carry
+    multiplicity in the path list itself and need no counts.
+    """
+    counts = counts or {}
+    return sum(config_ppa(policy.lookup(p)).logic_area_um2 * counts.get(p, 1)
+               for p in layer_paths)
+
+
+def policy_ppa(policy: NumericsPolicy, layer_paths: Sequence[str],
+               counts: Optional[Mapping[str, int]] = None) -> dict:
+    """Table II roll-up of a policy over a network's call sites: total
+    modeled logic area and power, one multiplier instance per path (scaled
+    by ``counts`` multiplicity), plus the all-exact baseline for deltas."""
+    counts = counts or {}
+    area = power = 0.0
+    for p in layer_paths:
+        est = config_ppa(policy.lookup(p))
+        k = counts.get(p, 1)
+        area += est.logic_area_um2 * k
+        power += est.power_w * k
+    n = sum(counts.get(p, 1) for p in layer_paths)
+    exact = ppa.estimate("exact", name="Exact")
+    return {
+        "area_um2": area,
+        "power_w": power,
+        "baseline_area_um2": exact.logic_area_um2 * n,
+        "baseline_power_w": exact.power_w * n,
+        "n_sites": n,
+    }
 
 
 def _emulated_config(name: str) -> NumericsConfig:
@@ -132,11 +176,14 @@ def pareto_candidates(**kw) -> list:
 @dataclasses.dataclass(frozen=True)
 class AutoConfigResult:
     policy: NumericsPolicy                    # serializable (policy.to_json())
-    error: float                              # achieved network error
+    error: float                              # network error: measured (greedy)
+    #                                           or composed-model (proxy)
     area_um2: float                           # modeled logic area, all layers
     baseline_area_um2: float                  # all layers on the default design
     assignments: Tuple[Tuple[str, str], ...]  # (layer path, design name)
     n_evals: int                              # eval_fn invocations spent
+    method: str = "greedy"
+    predicted_error: Optional[float] = None   # proxy only: == error
 
     @property
     def area_reduction(self) -> float:
@@ -148,25 +195,31 @@ def auto_configure(eval_fn: Callable[[NumericsPolicy], float],
                    error_budget: float,
                    candidates: Optional[Sequence[Tuple[str, NumericsConfig]]] = None,
                    default: Optional[NumericsConfig] = None,
-                   verbose: bool = False) -> AutoConfigResult:
-    """Greedy per-layer design selection under a network error budget.
+                   verbose: bool = False,
+                   method: str = "proxy") -> AutoConfigResult:
+    """Per-layer design selection under a network error budget.
 
     ``eval_fn(policy)`` runs the network on a calibration batch under
     ``policy`` and returns its error versus the exact baseline (e.g. MRED
     of the logits — any monotone scalar works).  ``layer_paths`` names the
-    layers to configure (e.g. ``repro.models.resnet.layer_paths(cfg)``);
-    ``candidates`` is a ``(name, NumericsConfig)`` list (default: the
-    emulated Pareto-frontier designs from :func:`pareto_candidates`);
-    ``default`` is the config of unassigned layers (default exact fp32).
+    layers to configure (e.g. ``repro.models.resnet.layer_paths(cfg)`` or
+    ``repro.models.transformer.layer_paths(cfg)``); ``candidates`` is a
+    ``(name, NumericsConfig)`` list (default: the emulated Pareto-frontier
+    designs from :func:`pareto_candidates`); ``default`` is the config of
+    unassigned layers (default exact fp32).
 
-    Greedy schedule: probe each layer's sensitivity by putting the
-    cheapest candidate on that layer alone, then visit layers least-
-    sensitive first, assigning each the cheapest candidate whose
-    *cumulative* policy stays within budget (re-evaluated jointly, so
-    error interactions between layers are respected).  Layers where no
-    candidate fits stay on the default.  Cost: ``O(L)`` probe evals plus
-    up to ``O(L * C)`` assignment evals.
+    ``method="proxy"`` (default) spends exactly one ``eval_fn`` call: the
+    instrumented calibration pass of ``repro.core.sensitivity`` records
+    per-site operand distributions and propagation coefficients, then a
+    knapsack-style exchange assigns each site the cheapest design whose
+    composed (modeled) error stays within budget — the proxy pass must run
+    the network eagerly (no surrounding jit) so the operand tap sees
+    concrete arrays.  ``method="greedy"`` keeps the original measured-error
+    schedule: ``O(L)`` probe evals plus up to ``O(L * C)`` assignment
+    evals, each a full-network run.
     """
+    if method not in ("proxy", "greedy"):
+        raise ValueError(f"unknown method {method!r}; expected 'proxy' or 'greedy'")
     default = default or NumericsConfig(mode="exact", compute_dtype="float32")
     cand = list(candidates) if candidates is not None else pareto_candidates()
     cand.sort(key=lambda nc: config_ppa(nc[1]).logic_area_um2)
@@ -175,6 +228,9 @@ def auto_configure(eval_fn: Callable[[NumericsPolicy], float],
             if config_ppa(c).logic_area_um2 < exact_area]
     if not cand:
         raise ValueError("no candidate is cheaper than the default design")
+    if method == "proxy":
+        return _proxy_configure(eval_fn, layer_paths, error_budget, cand,
+                                default, exact_area, verbose)
     n_evals = 0
 
     def evaluate(assign) -> float:
@@ -210,4 +266,102 @@ def auto_configure(eval_fn: Callable[[NumericsPolicy], float],
         baseline_area_um2=exact_area * len(layer_paths),
         assignments=tuple((p, assign[p][0]) for p in layer_paths if p in assign),
         n_evals=n_evals,
+        method="greedy",
+    )
+
+
+def _proxy_configure(eval_fn, layer_paths, error_budget, cand, default,
+                     exact_area, verbose) -> AutoConfigResult:
+    """Knapsack-style assignment over the composed-error model.
+
+    Start every recorded site on its cheapest candidate; while the composed
+    prediction exceeds budget, take the exchange (site -> lower-error
+    option, the default included as the zero-error anchor) with the best
+    error-reduction-per-area ratio.  Terminates within budget because the
+    all-default assignment contributes zero composed error.
+    """
+    from . import sensitivity as sens_mod  # deferred: keeps sweep importable alone
+
+    model = sens_mod.calibrate(eval_fn, default=default)
+    areas = [(name, c, config_ppa(c).logic_area_um2) for name, c in cand]
+
+    opts = {}       # path -> [(name or None, cfg, area, contribution)]
+    for p in layer_paths:
+        if p not in model.sites:
+            continue  # never executed on the calibration batch: stays default
+        o = [(name, c, a, model.contribution(p, c)) for name, c, a in areas]
+        o.append((None, default, exact_area, 0.0))
+        opts[p] = o
+    if layer_paths and not opts:
+        raise ValueError(
+            "proxy calibration recorded no operand samples for any of the "
+            f"{len(layer_paths)} layer paths — eval_fn must execute the "
+            "network EAGERLY (no surrounding jax.jit; scanned segments are "
+            "unrolled automatically) and route its matmuls through nmatmul "
+            "with the passed policy; use method='greedy' if eager execution "
+            "is not possible")
+    choice = {p: min(range(len(o)), key=lambda i: o[i][2])
+              for p, o in opts.items()}
+    total = model.baseline_error + sum(
+        opts[p][i][3] for p, i in choice.items())
+
+    # best exchange per site, served from a max-heap with lazy (versioned)
+    # invalidation: O((L*C) log(L*C)) overall instead of rescanning every
+    # (site, option) pair per exchange — L is tens of thousands of sites on
+    # the per-expert LM-zoo enumerations this method exists for.  The
+    # globally best exchange is always some site's best exchange, so the
+    # schedule is identical to the full rescan.
+    def best_move(p):
+        cur = opts[p][choice[p]]
+        best = None
+        for j, alt in enumerate(opts[p]):
+            gain = cur[3] - alt[3]
+            if gain <= 0.0:
+                continue
+            score = gain / max(alt[2] - cur[2], 1e-9)
+            if best is None or score > best[0]:
+                best = (score, gain, j)
+        return best
+
+    version = dict.fromkeys(opts, 0)
+    heap = []
+    for p in opts:
+        bm = best_move(p)
+        if bm is not None:
+            heapq.heappush(heap, (-bm[0], version[p], p, bm[2], bm[1]))
+    while total > error_budget and heap:
+        _, ver, p, j, gain = heapq.heappop(heap)
+        if ver != version[p]:
+            continue  # stale: this site was exchanged since the push
+        choice[p] = j
+        total -= gain
+        version[p] += 1
+        bm = best_move(p)
+        if bm is not None:
+            heapq.heappush(heap, (-bm[0], version[p], p, bm[2], bm[1]))
+
+    assign = {p: opts[p][i] for p, i in choice.items()
+              if opts[p][i][0] is not None}
+    if verbose:
+        for p in layer_paths:
+            if p in assign:
+                name, _, _, contrib = assign[p]
+                print(f"[auto_configure/proxy] {p:24s} -> {name:12s} "
+                      f"alpha={model.alpha[p]:.3f} contrib={contrib:.3e}")
+            elif p in opts:
+                print(f"[auto_configure/proxy] {p:24s} -> default")
+        print(f"[auto_configure/proxy] composed error {total:.3e} "
+              f"(budget {error_budget:.3e}, baseline "
+              f"{model.baseline_error:.3e})")
+    policy = NumericsPolicy.from_assignments(
+        {p: c for p, (_, c, _, _) in assign.items()}, default=default)
+    return AutoConfigResult(
+        policy=policy,
+        error=total,
+        area_um2=policy_area(policy, layer_paths),
+        baseline_area_um2=exact_area * len(layer_paths),
+        assignments=tuple((p, assign[p][0]) for p in layer_paths if p in assign),
+        n_evals=1,
+        method="proxy",
+        predicted_error=total,
     )

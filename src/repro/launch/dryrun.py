@@ -122,7 +122,23 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
     cost["xla_flops"] = compiled.cost_analysis().get("flops", 0.0)
     coll = hlo_analysis.collective_bytes(hlo_text)
     mflops = specs.model_flops(cfg, shape_name)
-    terms = hlo_analysis.roofline_terms(cost, coll, n_chips, model_flops=mflops)
+    # numerics-aware compute term: segmented multipliers skip MXU passes,
+    # and a per-layer policy scales by its site-weighted pass count
+    from repro.core.policy import is_policy
+
+    if is_policy(cfg.numerics):
+        from repro.models import transformer
+
+        scale = hlo_analysis.policy_compute_scale(
+            cfg.numerics, transformer.layer_paths(cfg),
+            counts=transformer.layer_path_counts(cfg))
+    elif getattr(cfg.numerics, "mode", "exact") == "segmented":
+        scale = cfg.numerics.seg_passes / hlo_analysis.EXACT_MXU_PASSES
+    else:
+        scale = 1.0
+    terms = hlo_analysis.roofline_terms(cost, coll, n_chips,
+                                        model_flops=mflops,
+                                        compute_scale=scale)
     return {
         "arch": arch,
         "shape": shape_name,

@@ -341,21 +341,72 @@ PEAK_FLOPS_BF16 = 197e12   # per chip
 HBM_BW = 819e9             # bytes/s per chip
 ICI_BW = 50e9              # bytes/s per link
 
+# MXU passes of the exact split-float product (paper Eq. 6: full 6-term
+# hi/lo expansion at HIGHEST precision); segmented seg_passes=k keeps k of
+# them, so a site's modeled compute-time scales by k/6 versus exact.
+EXACT_MXU_PASSES = 6
+
+
+def policy_compute_scale(policy, layer_paths, counts=None) -> float:
+    """Modeled MXU-pass scale of a policy versus the all-exact baseline.
+
+    Per site: exact -> 1.0; ``segmented`` -> ``seg_passes / 6`` (term
+    skipping drops whole MXU passes — the paper's latency lever on the
+    systolic datapath); ``emulated`` -> 1.0 (the bit-level emulation models
+    accuracy, not a faster datapath).  Returns the unweighted mean over
+    ``layer_paths`` (optionally weighted by ``counts`` multiplicity) — the
+    factor ``roofline_terms(compute_scale=...)`` applies to t_compute.
+    """
+    counts = counts or {}
+    num = den = 0.0
+    for p in layer_paths:
+        cfg = policy.lookup(p)
+        k = counts.get(p, 1)
+        scale = (cfg.seg_passes / EXACT_MXU_PASSES
+                 if cfg.mode == "segmented" else 1.0)
+        num += scale * k
+        den += k
+    return num / max(den, 1.0)
+
+
+def policy_ppa_summary(policy, layer_paths, counts=None) -> dict:
+    """Modeled area/power/latency of serving under a per-layer policy.
+
+    Rolls the resolved policy up through the Table II PPA model
+    (``repro.core.sweep.policy_ppa``: one multiplier instance per call-site
+    path, expert multiplicity carried by the path list) and attaches the
+    MXU-pass compute scale — what ``serve --policy`` reports and what the
+    roofline's compute term is scaled by.
+    """
+    from repro.core import sweep  # deferred: core must not need launch
+
+    out = dict(sweep.policy_ppa(policy, layer_paths, counts))
+    out["compute_scale"] = policy_compute_scale(policy, layer_paths, counts)
+    out["area_reduction"] = 1.0 - out["area_um2"] / max(
+        out["baseline_area_um2"], 1e-30)
+    out["power_reduction"] = 1.0 - out["power_w"] / max(
+        out["baseline_power_w"], 1e-30)
+    return out
+
 
 def roofline_terms(cost: dict, coll: CollectiveStats, n_chips: int,
-                   model_flops: float | None = None) -> dict:
+                   model_flops: float | None = None,
+                   compute_scale: float = 1.0) -> dict:
     """``cost`` comes from loop_aware_cost (per-device, trip-count-correct).
 
     The memory term uses the kernel-aware ``bytes_fused`` model (carries +
     weight reads + collectives stream HBM; intra-body intermediates live in
     VMEM — that is what the TPU target with the Pallas kernels does); the
     stream and XLA-convention byte counts are recorded alongside.
+    ``compute_scale`` folds a numerics policy into the compute term
+    (:func:`policy_compute_scale`): segmented multipliers skip MXU passes,
+    so the modeled t_compute shrinks while memory/collective terms do not.
     """
     hlo_flops = float(cost.get("flops", 0.0))
     hlo_bytes_xla = float(cost.get("bytes", cost.get("bytes accessed", 0.0)))
     hlo_bytes_stream = float(cost.get("bytes_stream", hlo_bytes_xla))
     hlo_bytes = float(cost.get("bytes_fused", hlo_bytes_stream))
-    t_compute = hlo_flops / PEAK_FLOPS_BF16
+    t_compute = hlo_flops * compute_scale / PEAK_FLOPS_BF16
     t_memory = hlo_bytes / HBM_BW
     t_collective = coll.total_bytes / ICI_BW
     dominant = max(
@@ -363,6 +414,7 @@ def roofline_terms(cost: dict, coll: CollectiveStats, n_chips: int,
         key=lambda kv: kv[1])[0]
     out = {
         "hlo_flops_per_chip": hlo_flops,
+        "numerics_compute_scale": compute_scale,
         "hlo_bytes_per_chip": hlo_bytes,
         "hlo_bytes_stream_per_chip": hlo_bytes_stream,
         "hlo_bytes_xla_convention_per_chip": hlo_bytes_xla,

@@ -5,7 +5,10 @@ served under exact / segmented-3 / segmented-1 (ACL-like) numerics, with
 per-request greedy decoding.  ``--policy policy.json`` serves under a
 per-layer :class:`~repro.core.policy.NumericsPolicy` (e.g. one emitted by
 ``repro.core.sweep.auto_configure``; schema in ``docs/numerics_policy.md``)
-instead of a single global setting.
+instead of a single global setting, and prints the modeled area / power /
+compute-latency of the resolved policy (Table II roll-up over every call
+site — per-expert MoE paths included — plus the MXU-pass roofline scale
+from ``repro.launch.hlo_analysis.policy_ppa_summary``).
 """
 from __future__ import annotations
 
@@ -20,6 +23,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.numerics import NumericsConfig
 from repro.core.policy import NumericsPolicy
+from repro.launch import hlo_analysis
 from repro.models import transformer
 from repro.models.layers import unzip
 
@@ -36,6 +40,18 @@ def serve(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
                 policy = NumericsPolicy.from_json(f.read())
         cfg = dataclasses.replace(cfg, numerics=policy)
         numerics = "policy"
+        # modeled PPA + latency of the resolved policy over every call site
+        # (per-expert MoE paths included), via the Table II roll-up and the
+        # MXU-pass roofline term
+        paths = transformer.layer_paths(cfg)
+        ppa = hlo_analysis.policy_ppa_summary(
+            policy, paths, counts=transformer.layer_path_counts(cfg))
+        print(f"[serve] policy over {ppa['n_sites']} call sites: "
+              f"area {ppa['area_um2']:,.0f} um^2 "
+              f"(-{ppa['area_reduction']:.1%} vs exact), "
+              f"power {ppa['power_w']:.3f} W "
+              f"(-{ppa['power_reduction']:.1%}), "
+              f"modeled compute latency x{ppa['compute_scale']:.2f}")
     elif numerics != "exact":
         passes = {"segmented3": 3, "segmented2": 2, "segmented1": 1}[numerics]
         cfg = dataclasses.replace(cfg, numerics=NumericsConfig(

@@ -9,7 +9,13 @@ shards over 'model' (classic EP) and under serving rules over 'data'
 all-to-alls from the sharding change at the scatter/gather boundaries.
 
 Supports top-k routing, shared (always-on) experts (deepseek-v3), and
-routes every expert matmul through the paper's numerics config.
+routes every expert matmul through the paper's numerics config — including
+the routed experts: each expert's three projections resolve under the
+relative ``expert{k}.{wi,wg,wo}`` paths (full paths
+``blocks.{i}.mlp.expert{k}.wi`` etc.), so a per-layer policy can give
+different experts different multipliers.  When every expert resolves to an
+``exact`` config (the pre-policy behaviour, and any plain exact
+NumericsConfig), the fused all-expert einsum datapath is kept bit-for-bit.
 """
 from __future__ import annotations
 
@@ -19,8 +25,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.numerics import NumericsConfig, nmatmul
-from repro.core.policy import Numerics, scoped
+from repro.core.numerics import nmatmul, operand_tap_active
+from repro.core.policy import Numerics, resolve, scoped
 from repro.distributed.sharding import (current_mesh_rules, logical_constraint,
                                         spec_for)
 
@@ -43,14 +49,51 @@ def moe_init(key, cfg):
     return p
 
 
+def routed_expert_configs(ncfg: Numerics, n_experts: int) -> dict:
+    """Resolved config per (projection, expert) under ``expert{k}.{name}``.
+
+    ``ncfg`` is the block's ``mlp``-scoped policy view (or a plain config,
+    which resolves identically for every expert).  Returns
+    ``{name: (cfg_expert0, ..., cfg_expertE-1)}`` for wi/wg/wo.
+    """
+    return {name: tuple(resolve(ncfg, f"expert{k}.{name}")
+                        for k in range(n_experts))
+            for name in ("wi", "wg", "wo")}
+
+
+def _all_exact(cfgs: dict) -> bool:
+    return all(c.mode == "exact" for tup in cfgs.values() for c in tup)
+
+
+def _experts_matmul(buf, w, ncfg, name, out_dtype):
+    """Per-expert numerics matmul: ``buf (B, E, C, D) @ w (E, D, F)``.
+
+    Each expert's slab goes through :func:`nmatmul` under its own resolved
+    path (``expert{k}.{name}``), so distinct experts can run distinct
+    multipliers in one forward.  Used only when some expert resolves
+    non-exact (or the calibration tap is recording) — the all-exact fast
+    path keeps the fused einsum.
+    """
+    B, E, C, D = buf.shape
+    outs = []
+    for k in range(E):
+        ye = nmatmul(buf[:, k].reshape(B * C, D), w[k], ncfg,
+                     path=f"expert{k}.{name}")
+        outs.append(ye.reshape(B, C, -1).astype(out_dtype))
+    return jnp.stack(outs, axis=1)
+
+
 def moe_apply(params, x, cfg, ncfg: Numerics):
     """x: (B, S, D) -> (B, S, D).
 
     ``ncfg`` may be a policy view scoped to this block's ``mlp`` prefix;
     the shared (always-on) expert resolves under the relative ``shared.*``
-    paths.  Routed-expert einsums and the router run exact (routing is
-    control logic; the dense expert slab multiply stays on the digital
-    datapath in the CiM deployment model).
+    paths and the routed experts under ``expert{k}.{wi,wg,wo}``.  The
+    router always runs exact fp32 (routing is control logic).  When every
+    expert resolves to an exact config the routed slab multiply keeps the
+    fused all-expert einsum in ``x.dtype`` — bit-for-bit the pre-policy
+    datapath; any non-exact expert switches the layer to per-expert
+    :func:`nmatmul` calls.
 
     Two implementations:
     * **shard_map EP** (used whenever a mesh context with a 'model' axis
@@ -78,6 +121,17 @@ def _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules):
     e = cfg.moe
     E, K = e.n_experts, e.top_k
     B, S, D = x.shape
+
+    # per-expert numerics: the shard_map body traces ONCE for all EP shards,
+    # so expert-heterogeneous configs cannot branch per shard — uniform
+    # non-exact configs run per-local-expert nmatmul inside the body;
+    # heterogeneous policies fall back to the group-local GSPMD path (which
+    # slices experts at trace time and lets GSPMD partition the result).
+    cfgs = routed_expert_configs(ncfg, E)
+    if any(len(set(tup)) > 1 for tup in cfgs.values()):
+        return _moe_apply_gspmd(params, x, cfg, ncfg)
+    ucfg = {name: tup[0] for name, tup in cfgs.items()}
+    exact_experts = _all_exact(cfgs)
 
     x_spec = spec_for(("batch", "seq", None), x.shape, mesh, rules)
     w_spec = spec_for(("experts", None, None), params["wi"].shape, mesh, rules)
@@ -127,10 +181,19 @@ def _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules):
         # EP exchange: (E, C, D) -> (E/nm, C*nm, D); local expert compute
         buf = jax.lax.all_to_all(buf, ex_axes, split_axis=0, concat_axis=1,
                                  tiled=True)
-        h = jnp.einsum("ecd,edf->ecf", buf, wi.astype(xl.dtype))
-        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(xl.dtype))
-        h = h * jax.nn.silu(g)
-        out = jnp.einsum("ecf,efd->ecd", h, wo.astype(xl.dtype))
+        if exact_experts:
+            h = jnp.einsum("ecd,edf->ecf", buf, wi.astype(xl.dtype))
+            g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(xl.dtype))
+            h = h * jax.nn.silu(g)
+            out = jnp.einsum("ecf,efd->ecd", h, wo.astype(xl.dtype))
+        else:
+            local = lambda b, w_, c_: jnp.stack(
+                [nmatmul(b[i], w_[i], c_) for i in range(b.shape[0])]
+            ).astype(xl.dtype)
+            h = local(buf, wi, ucfg["wi"])
+            g = local(buf, wg, ucfg["wg"])
+            h = h * jax.nn.silu(g)
+            out = local(h, wo, ucfg["wo"])
         out = jax.lax.all_to_all(out, ex_axes, split_axis=1, concat_axis=0,
                                  tiled=True)                    # (E, C, D)
 
@@ -156,7 +219,7 @@ def _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules):
     return y
 
 
-def _moe_apply_gspmd(params, x, cfg, ncfg: NumericsConfig):
+def _moe_apply_gspmd(params, x, cfg, ncfg: Numerics):
     B, S, D = x.shape
     e = cfg.moe
     E, K = e.n_experts, e.top_k
@@ -201,11 +264,21 @@ def _moe_apply_gspmd(params, x, cfg, ncfg: NumericsConfig):
     buf = jax.vmap(gather_group)(x, src)                 # (B, E, C, D)
     buf = logical_constraint(buf, ("batch", "experts", None, None))
 
-    # expert MLPs (weights EP-sharded over 'experts'; groups stay on 'data')
-    h = jnp.einsum("becd,edf->becf", buf, params["wi"].astype(x.dtype))
-    g = jnp.einsum("becd,edf->becf", buf, params["wg"].astype(x.dtype))
-    h = h * jax.nn.silu(g)
-    out_buf = jnp.einsum("becf,efd->becd", h, params["wo"].astype(x.dtype))
+    # expert MLPs (weights EP-sharded over 'experts'; groups stay on 'data').
+    # All-exact experts keep the fused einsum (bit-for-bit the pre-policy
+    # datapath); any non-exact expert — or an active calibration tap, which
+    # needs per-expert operand records — switches to per-expert nmatmul.
+    cfgs = routed_expert_configs(ncfg, E)
+    if _all_exact(cfgs) and not operand_tap_active():
+        h = jnp.einsum("becd,edf->becf", buf, params["wi"].astype(x.dtype))
+        g = jnp.einsum("becd,edf->becf", buf, params["wg"].astype(x.dtype))
+        h = h * jax.nn.silu(g)
+        out_buf = jnp.einsum("becf,efd->becd", h, params["wo"].astype(x.dtype))
+    else:
+        h = _experts_matmul(buf, params["wi"], ncfg, "wi", x.dtype)
+        g = _experts_matmul(buf, params["wg"], ncfg, "wg", x.dtype)
+        h = h * jax.nn.silu(g)
+        out_buf = _experts_matmul(h, params["wo"], ncfg, "wo", x.dtype)
     out_buf = logical_constraint(out_buf, ("batch", "experts", None, None))
 
     def combine_group(ob, invg, gg):

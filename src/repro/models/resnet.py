@@ -22,8 +22,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.numerics import NumericsConfig, nmatmul
-from repro.core.policy import Numerics, resolve
+from repro.core.numerics import NumericsConfig, nmatmul, operand_tap_active
+from repro.core.policy import Numerics, is_policy, resolve
 
 from .layers import PP, normal
 
@@ -69,13 +69,21 @@ def bn_state_init(c):
 
 
 def conv2d(x, w, stride=1, numerics: Numerics | None = None, path: str = ""):
-    """NHWC conv; approximate numerics use im2col + the numerics matmul."""
-    numerics = resolve(numerics, path) if numerics is not None else None
-    if numerics is None or numerics.mode == "exact":
+    """NHWC conv; approximate numerics use im2col + the numerics matmul.
+
+    Exact convs run the native lowering — except while a sensitivity
+    calibration tap is installed (``repro.core.numerics.operand_tap_active``),
+    when they too route through im2col + ``nmatmul`` so the instrumented
+    pass records this site's operand distribution under ``path``.
+    """
+    resolved = resolve(numerics, path) if numerics is not None else None
+    if resolved is None or (resolved.mode == "exact"
+                            and not operand_tap_active()):
         return jax.lax.conv_general_dilated(
             x, w, (stride, stride), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         )
+    numerics = resolved if not is_policy(numerics) else numerics
     kh, kw, cin, cout = w.shape
     B, H, W, _ = x.shape
     Ho, Wo = -(-H // stride), -(-W // stride)
@@ -92,8 +100,10 @@ def conv2d(x, w, stride=1, numerics: Numerics | None = None, path: str = ""):
                    j:j + (Wo - 1) * stride + 1:stride, :])
     cols = jnp.concatenate(patches, axis=-1).reshape(B * Ho * Wo, kh * kw * cin)
     wmat = w.reshape(kh * kw * cin, cout)
-    # one audited entry point for emulated AND segmented approximate convs
-    out = nmatmul(cols, wmat, numerics)
+    # one audited entry point for emulated AND segmented approximate convs;
+    # the policy (when given) re-resolves inside nmatmul so the calibration
+    # tap records this site under its full path
+    out = nmatmul(cols, wmat, numerics, path=path)
     return out.reshape(B, Ho, Wo, cout)
 
 
@@ -178,7 +188,7 @@ def apply(params, state, x, cfg: ResNetConfig, train: bool = False):
             new_state[f"s{si}b{bi}"] = s
     h = h.mean(axis=(1, 2))
     # final classifier also goes through the configured multiplier
-    logits = nmatmul(h, params["fc"], resolve(cfg.numerics, "fc"))
+    logits = nmatmul(h, params["fc"], cfg.numerics, path="fc")
     return logits + params["fc_b"], new_state
 
 

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.numerics import nmatmul
-from repro.core.policy import is_policy, resolve, scoped
+from repro.core.policy import expert_paths, is_policy, resolve, scoped
 from repro.distributed.sharding import logical_constraint
 
 from . import attention as attn
@@ -121,13 +121,58 @@ def block_numerics_sites(cfg, spec):
     if cfg.encoder_layers:
         sites += ["cross.wq", "cross.wk", "cross.wv", "cross.wo"]
     if spec.kind == "moe":
-        # routed experts run exact einsums; only the always-on shared
-        # expert (when configured) has policy-resolvable matmul sites
-        if cfg.moe is not None and cfg.moe.n_shared:
+        # every routed expert resolves its three projections individually
+        # (expert multiplicity: one multiplier array instance per expert)
+        sites += list(expert_paths(cfg.moe.n_experts, prefix="mlp"))
+        if cfg.moe.n_shared:
             sites += ["mlp.shared.wi", "mlp.shared.wg", "mlp.shared.wo"]
     else:
         sites += ["mlp.wi", "mlp.wg", "mlp.wo"]
     return tuple(sites)
+
+
+def layer_paths(cfg) -> list:
+    """All policy paths of the decoder stack (+ encoder + lm_head), in
+    execution order — the transformer analogue of
+    ``repro.models.resnet.layer_paths``, what ``sweep.auto_configure`` and
+    the PPA roll-up (``sweep.policy_area`` / ``policy_ppa``) enumerate.
+    MoE blocks contribute one path per routed expert projection, so expert
+    multiplicity is carried by the path list itself; the scanned encoder's
+    unindexed ``encoder.blocks.*`` sites each stand for
+    ``cfg.encoder_layers`` physical layers — pass
+    :func:`layer_path_counts` as ``counts=`` to the roll-ups to weight
+    them."""
+    paths = []
+    idx = 0
+    for repeats, pattern in cfg.segments:
+        for _ in range(repeats):
+            for spec in pattern:
+                paths += [f"blocks.{idx}.{s}"
+                          for s in block_numerics_sites(cfg, spec)]
+                idx += 1
+    if cfg.encoder_layers:
+        enc_cfg = dataclasses.replace(cfg, encoder_layers=0)
+        paths += [f"encoder.blocks.{s}"
+                  for s in block_numerics_sites(enc_cfg, _enc_spec(cfg))]
+    paths.append("lm_head")
+    return paths
+
+
+def layer_path_counts(cfg) -> dict:
+    """Instance multiplicity for paths standing for >1 physical layer.
+
+    The whisper-style encoder scans its layers with a single trace, so one
+    unindexed ``encoder.blocks.{site}`` path covers ``cfg.encoder_layers``
+    multiplier-array instances; every other path (decoder blocks, per-
+    expert MoE projections, ``lm_head``) is already enumerated one-to-one
+    by :func:`layer_paths`.  Feed this to ``sweep.policy_area`` /
+    ``policy_ppa`` and ``hlo_analysis.policy_compute_scale`` as
+    ``counts=``."""
+    if not cfg.encoder_layers:
+        return {}
+    enc_cfg = dataclasses.replace(cfg, encoder_layers=0)
+    return {f"encoder.blocks.{s}": cfg.encoder_layers
+            for s in block_numerics_sites(enc_cfg, _enc_spec(cfg))}
 
 
 def _segment_scannable(ncfg, cfg, pattern, offset, repeats):
@@ -137,7 +182,13 @@ def _segment_scannable(ncfg, cfg, pattern, offset, repeats):
     differ if the segment is unrolled; this probe decides which.  Plain
     configs and single-repeat segments are trivially scannable.
     """
-    if not is_policy(ncfg) or repeats == 1:
+    if not is_policy(ncfg):
+        return True
+    if getattr(ncfg, "force_unroll", False):
+        # sensitivity calibration: every repeat must execute eagerly so the
+        # operand tap records concrete arrays (see repro.core.sensitivity)
+        return False
+    if repeats == 1:
         return True
     P = len(pattern)
     for pi, spec in enumerate(pattern):
@@ -290,13 +341,18 @@ def stack_apply(params, x, cfg, ncfg, positions, mode, caches=None,
         else:
             # heterogeneous policy: unroll so each repeat traces its own
             # numerics; caches re-stack to the scanned layout (leading
-            # repeats axis) so prefill/decode consumers see one format
+            # repeats axis) so prefill/decode consumers see one format.
+            # A force_unroll (calibration) policy additionally skips remat —
+            # jax.checkpoint traces its body, which would hide operands from
+            # the sensitivity tap.
+            wrap = ((lambda f: f) if getattr(ncfg, "force_unroll", False)
+                    else (lambda f: _remat(f, cfg)))
             per_repeat = []
             for r in range(repeats):
                 def one_repeat(x, xs, _base=layer_offset + r * P):
                     return seg_body_at(_base, x, xs[0], xs[1])
 
-                x, oc = _remat(one_repeat, cfg)(
+                x, oc = wrap(one_repeat)(
                     x, ({pi: take_r(v, r) for pi, v in stacked.items()},
                         {pi: take_r(v, r) for pi, v in seg_caches.items()}))
                 per_repeat.append(oc)
@@ -365,7 +421,7 @@ def logits_fn(params, cfg, hidden):
     if is_policy(cfg.numerics):
         # the unembedding participates in per-layer policies as ``lm_head``
         # (a policy default of exact/bf16 reproduces the legacy head)
-        logits = nmatmul(hidden, w, resolve(cfg.numerics, "lm_head"))
+        logits = nmatmul(hidden, w, cfg.numerics, path="lm_head")
     else:
         logits = jax.lax.dot_general(
             hidden.astype(jnp.bfloat16), w.astype(jnp.bfloat16),

@@ -22,3 +22,34 @@ def rng(request):
 def seeded_rng():
     """One fixed stream for tests that want cross-test reproducibility."""
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def small_moe():
+    """Factory for a tiny MoE layer: ``small_moe(E=2, ...)`` returns
+    ``(cfg, params, x)`` on the deepseek-v3 family config with reduced
+    dims.  Defaults are the smallest useful setup (2 experts, tiny dims);
+    shared by test_moe.py, test_moe_shardmap.py and test_sensitivity.py so
+    the default suite stays under its ~2 min budget."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.models import moe as moe_mod
+    from repro.models.layers import unzip
+
+    def make(E=2, K=1, T=8, D=8, FF=16, cf=8.0, n_shared=0, seed=0, B=2):
+        cfg_arch = get_arch("deepseek-v3-671b").reduced()
+        cfg = dataclasses.replace(
+            cfg_arch, d_model=D, d_ff=FF,
+            moe=dataclasses.replace(cfg_arch.moe, n_experts=E, top_k=K,
+                                    capacity_factor=cf, n_shared=n_shared))
+        pp = moe_mod.moe_init(jax.random.PRNGKey(seed), cfg)
+        params, _ = unzip(pp)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, T // B, D),
+                              jnp.float32)
+        return cfg, params, x
+
+    return make

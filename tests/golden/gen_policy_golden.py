@@ -1,0 +1,187 @@
+"""Golden-vector generator: MoE per-expert path resolution + sensitivity.
+
+An independent reference implementation (stdlib ``fnmatch`` + plain numpy,
+deliberately sharing NO code with ``repro.core.policy`` /
+``repro.core.sensitivity``) that pins two subsystems:
+
+1. **Per-expert policy resolution** — ordered first-match glob rules over
+   MoE expert paths (``blocks.{i}.mlp.expert{k}.{wi,wg,wo}``), resolved by
+   a six-line reference resolver.  The consuming test
+   (``tests/test_policy.py``) replays each case through ``NumericsPolicy``
+   and compares the resolved config tags.
+2. **Sensitivity coefficients** — fixed-PRNG operand matrices pushed
+   through a numpy reimplementation of the split-float segmented product
+   (bf16 round-to-nearest-even via the integer carry trick) to produce
+   per-site ``out_rms``, propagation coefficients ``alpha``, per-design
+   local MRED, and a composed prediction.  The consuming test
+   (``tests/test_sensitivity.py``) rebuilds the model through the real
+   operand tap and compares.
+
+Run from the repo root to regenerate ``tests/golden/policy_golden.json``:
+
+    python tests/golden/gen_policy_golden.py
+"""
+from __future__ import annotations
+
+import fnmatch
+import json
+import os
+
+import numpy as np
+
+CONFIG_TAGS = {
+    "exact": {"mode": "exact", "compute_dtype": "float32"},
+    "seg1": {"mode": "segmented", "seg_passes": 1, "backend": "xla"},
+    "seg2": {"mode": "segmented", "seg_passes": 2, "backend": "xla"},
+    "seg3": {"mode": "segmented", "seg_passes": 3, "backend": "xla"},
+    "ac44": {"mode": "emulated", "multiplier": "AC4-4", "seg_n": 4},
+}
+
+
+# ---------------------------------------------------------------------------
+# part 1: per-expert path resolution (reference resolver: first match wins)
+# ---------------------------------------------------------------------------
+
+def resolve_tag(rules, default_tag, path):
+    for pattern, tag in rules:
+        if fnmatch.fnmatchcase(path, pattern):
+            return tag
+    return default_tag
+
+
+def expert_site_paths(block, n_experts, names=("wi", "wg", "wo")):
+    return [f"blocks.{block}.mlp.expert{k}.{n}"
+            for k in range(n_experts) for n in names]
+
+
+RESOLUTION_CASES = [
+    {
+        "label": "one-expert-approximate",
+        "rules": [["blocks.*.mlp.expert0.*", "seg1"]],
+        "default": "exact",
+        "paths": expert_site_paths(0, 2) + expert_site_paths(7, 2),
+    },
+    {
+        "label": "per-projection-split",
+        "rules": [["blocks.*.mlp.expert*.wo", "seg3"],
+                  ["blocks.*.mlp.expert*.w?", "seg1"]],
+        "default": "exact",
+        "paths": expert_site_paths(3, 3),
+    },
+    {
+        "label": "block-specific-beats-broad",
+        "rules": [["blocks.0.mlp.expert1.wi", "ac44"],
+                  ["blocks.0.mlp.*", "seg2"],
+                  ["blocks.*.mlp.expert*.*", "seg1"]],
+        "default": "exact",
+        "paths": expert_site_paths(0, 2) + expert_site_paths(1, 2)
+        + ["blocks.0.mlp.shared.wi", "lm_head"],
+    },
+    {
+        "label": "expert-range-set",
+        "rules": [["blocks.*.mlp.expert[01].*", "seg3"],
+                  ["blocks.*.mlp.expert[23].*", "seg1"]],
+        "default": "exact",
+        "paths": expert_site_paths(5, 4),
+    },
+]
+
+
+def build_resolution_cases():
+    out = []
+    for case in RESOLUTION_CASES:
+        expected = {p: resolve_tag(case["rules"], case["default"], p)
+                    for p in case["paths"]}
+        out.append({**case, "expected": expected})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# part 2: sensitivity fixtures (numpy split-float + rms/alpha/MRED)
+# ---------------------------------------------------------------------------
+
+def bf16_rne(x: np.ndarray) -> np.ndarray:
+    """fp32 -> bf16 (stored as fp32): round-to-nearest-even by integer carry."""
+    bits = np.asarray(x, np.float32).view(np.uint32)
+    rounded = (bits + np.uint32(0x7FFF) + ((bits >> np.uint32(16))
+                                           & np.uint32(1))) & np.uint32(0xFFFF0000)
+    return rounded.view(np.float32)
+
+
+def split_hi_lo(x):
+    hi = bf16_rne(x)
+    lo = bf16_rne(np.asarray(x, np.float32) - hi)
+    return hi, lo
+
+
+def segmented_matmul(x, w, passes):
+    xh, xl = split_hi_lo(x)
+    wh, wl = split_hi_lo(w)
+    out = np.matmul(xh.astype(np.float32), wh.astype(np.float32),
+                    dtype=np.float32)
+    if passes >= 2:
+        out = out + np.matmul(xl.astype(np.float32), wh.astype(np.float32),
+                              dtype=np.float32)
+    if passes >= 3:
+        out = out + np.matmul(xh.astype(np.float32), wl.astype(np.float32),
+                              dtype=np.float32)
+    return out
+
+
+def mred(approx, exact):
+    approx = np.asarray(approx, np.float64).ravel()
+    exact = np.asarray(exact, np.float64).ravel()
+    mask = np.isfinite(exact) & np.isfinite(approx) & (exact != 0)
+    return float(np.mean(np.abs(approx[mask] - exact[mask])
+                         / np.abs(exact[mask])))
+
+
+def build_sensitivity_fixture(seed=20260730):
+    """A 3-site chain (the output of one site feeds the next) with fixed-
+    PRNG operands; expected alpha / local errors / composed prediction."""
+    rng = np.random.default_rng(seed)
+    shapes = [(12, 8, 6), (12, 6, 10), (12, 10, 4)]
+    names = ["s0", "s1", "s2"]
+    h = rng.standard_normal((shapes[0][0], shapes[0][1])).astype(np.float32)
+    sites = []
+    for name, (m, k, n) in zip(names, shapes):
+        w = (rng.standard_normal((k, n)) / np.sqrt(k)).astype(np.float32)
+        exact = h.astype(np.float64) @ w.astype(np.float64)
+        local = {f"seg{p}": mred(segmented_matmul(h, w, p), exact)
+                 for p in (1, 2, 3)}
+        sites.append({
+            "path": name,
+            "x": [[float(v) for v in row] for row in h],
+            "w": [[float(v) for v in row] for row in w],
+            "out_rms": float(np.sqrt(np.mean(exact * exact))),
+            "local_mred": local,
+        })
+        h = exact.astype(np.float32)  # exact f32 chain, like the eager pass
+    net_rms = sites[-1]["out_rms"]
+    for s in sites:
+        s["alpha"] = s["out_rms"] / net_rms
+    # composed first-order prediction for a mixed assignment
+    assignment = {"s0": "seg1", "s1": "seg3", "s2": "seg2"}
+    composed = sum(s["alpha"] * s["local_mred"][assignment[s["path"]]]
+                   for s in sites)
+    return {"seed": seed, "sites": sites, "assignment": assignment,
+            "composed_prediction": composed}
+
+
+def main():
+    out = {
+        "resolution_cases": build_resolution_cases(),
+        "config_tags": CONFIG_TAGS,
+        "sensitivity": build_sensitivity_fixture(),
+    }
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "policy_golden.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    n_res = sum(len(c["expected"]) for c in out["resolution_cases"])
+    print(f"wrote {path}: {n_res} resolution expectations, "
+          f"{len(out['sensitivity']['sites'])} sensitivity sites")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Backend-equivalence fuzz: random shapes/dtypes/configs through
+``afpm_matmul`` on ``interpret`` vs ``xla`` (and ``pallas`` when a TPU is
+attached), asserting ulp-bounded agreement.
+
+Parametrized over the dispatch tuning-table shape buckets
+(``small``/``medium``/``large``), so every (backend, bucket) block-size
+entry is exercised by at least one case — including multi-block grids,
+where the accumulation order differs from the single-dot oracle and
+agreement is ulp-bounded rather than bit-exact (compare
+tests/test_kernels_dispatch.py, which pins the single-block case
+bit-for-bit).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+
+# draw ranges per bucket: the bucketed dim is the max extent, the other
+# dims stay small so interpreter-mode grids remain cheap to simulate
+BUCKET_RANGES = {"small": (9, 256), "medium": (257, 1024),
+                 "large": (1025, 1536)}
+
+# agreement bound: ulps of the LARGEST output magnitude — multi-block fp32
+# accumulation reorders sums, so per-element wobble scales with the
+# accumulated magnitude, not the (possibly cancelled-to-tiny) element value
+ULP_BOUND = 64
+
+
+def _backends():
+    out = ["interpret", "xla"]
+    if jax.default_backend() == "tpu":
+        out.append("pallas")
+    return out
+
+
+def _assert_ulp_close(got, want, trials_id):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    assert got.shape == want.shape, trials_id
+    assert np.isfinite(got).all() and np.isfinite(want).all(), trials_id
+    scale = np.float32(max(np.max(np.abs(want)), np.finfo(np.float32).tiny))
+    tol = ULP_BOUND * np.spacing(scale)
+    worst = np.max(np.abs(got - want))
+    assert worst <= tol, (trials_id, float(worst), float(tol))
+
+
+@pytest.mark.parametrize("bucket", sorted(BUCKET_RANGES))
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_matmul_backends_agree_across_buckets(bucket, dtype, rng):
+    lo, hi = BUCKET_RANGES[bucket]
+    n_trials = 3 if bucket == "small" else 2
+    for t in range(n_trials):
+        # one axis lands in the bucket, the others stay small; the bucketed
+        # axis rotates through M / K / N so contraction-heavy and
+        # output-heavy grids are both covered
+        big = int(rng.integers(lo, hi + 1))
+        small_dims = [int(rng.integers(3, 48)) for _ in range(2)]
+        dims = small_dims[:]
+        dims.insert(t % 3, big)
+        M, K, N = dims
+        assert dispatch.shape_bucket(M, K, N) == bucket
+        passes = int(rng.integers(1, 4))
+        batched = bool(rng.integers(0, 2)) and bucket == "small"
+        lead = (2,) if batched else ()
+        x = jnp.asarray(rng.standard_normal(lead + (M, K)),
+                        jnp.dtype(dtype)).astype(jnp.float32)
+        w = jnp.asarray(rng.standard_normal((K, N)),
+                        jnp.dtype(dtype)).astype(jnp.float32)
+        outs = {b: dispatch.matmul(x, w, passes, backend=b)
+                for b in _backends()}
+        want = outs.pop("xla")
+        for b, got in outs.items():
+            _assert_ulp_close(got, want, (bucket, dtype, t, b, (M, K, N),
+                                          passes))
+
+
+@pytest.mark.parametrize("bucket", sorted(BUCKET_RANGES))
+def test_bucketed_block_sizes_actually_selected(bucket, rng):
+    """The fuzz shapes must hit the tuning-table row they claim to cover."""
+    lo, hi = BUCKET_RANGES[bucket]
+    m = int(rng.integers(lo, hi + 1))
+    blocks = dispatch.matmul_block_sizes("interpret", m, 8, 8)
+    assert blocks == dispatch.MATMUL_BLOCKS[("interpret", bucket)]
+
+
+def test_elementwise_multiply_backends_agree_fuzz(rng):
+    """Random shapes/configs through the bit-level elementwise kernel:
+    interpret and xla must agree BIT-exactly (same scalar datapath)."""
+    from repro.core.afpm import AFPMConfig
+
+    for _ in range(4):
+        shape = tuple(int(rng.integers(1, 40))
+                      for _ in range(int(rng.integers(1, 4))))
+        n = int(rng.integers(3, 8))
+        mode = "acl" if rng.integers(0, 2) else "ac"
+        cfg = AFPMConfig(n=n, mode=mode)
+        x = jnp.asarray(rng.standard_normal(shape) * 4, jnp.float32)
+        y = jnp.asarray(rng.standard_normal(shape) * 4, jnp.float32)
+        got = dispatch.multiply(x, y, cfg, backend="interpret")
+        want = dispatch.multiply(x, y, cfg, backend="xla")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

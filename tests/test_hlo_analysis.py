@@ -106,3 +106,37 @@ def test_roofline_terms_shape():
     assert t["t_collective_s"] == pytest.approx(1.0)
     assert t["useful_flops_ratio"] == pytest.approx(1.0)
     assert t["roofline_fraction"] == pytest.approx(1.0)
+
+
+def test_roofline_compute_scale_shrinks_only_compute():
+    cost = {"flops": 197e12, "bytes_fused": 819e9, "bytes": 1e12,
+            "bytes_stream": 9e11}
+    coll = H.CollectiveStats(50e9, {"all-gather": 50e9})
+    t = H.roofline_terms(cost, coll, 256, compute_scale=0.5)
+    assert t["t_compute_s"] == pytest.approx(0.5)
+    assert t["t_memory_s"] == pytest.approx(1.0)
+    assert t["t_collective_s"] == pytest.approx(1.0)
+    assert t["numerics_compute_scale"] == 0.5
+
+
+def test_policy_compute_scale_and_ppa_summary():
+    from repro.core.numerics import NumericsConfig
+    from repro.core.policy import NumericsPolicy, PolicyRule
+
+    seg1 = NumericsConfig(mode="segmented", seg_passes=1, backend="xla")
+    pol = NumericsPolicy((PolicyRule("mlp.*", seg1),),
+                         default=NumericsConfig(mode="exact"))
+    paths = ["attn.wq", "mlp.wi", "mlp.wo"]
+    # 1 exact site (scale 1) + 2 single-pass sites (scale 1/6)
+    want = (1.0 + 2 * (1 / 6)) / 3
+    assert H.policy_compute_scale(pol, paths) == pytest.approx(want)
+    # counts= multiplicity weighting (one path standing for 4 experts)
+    w4 = (1.0 + 4 * (1 / 6)) / 5
+    assert H.policy_compute_scale(pol, ["attn.wq", "mlp.wi"],
+                                  counts={"mlp.wi": 4}) == pytest.approx(w4)
+    summary = H.policy_ppa_summary(pol, paths)
+    assert summary["n_sites"] == 3
+    assert 0 < summary["area_um2"] < summary["baseline_area_um2"]
+    assert 0 < summary["power_w"] < summary["baseline_power_w"]
+    assert summary["compute_scale"] == pytest.approx(want)
+    assert 0 < summary["area_reduction"] < 1

@@ -139,6 +139,97 @@ def test_every_multiplier_bounded_error(name, x, y):
     assert abs(r - want) / abs(want) < 0.13, (name, x, y, r, want)
 
 
+# ---- design-ladder monotonicity (every SWEEPABLE design) -------------------
+#
+# Within each family, MRED must be non-increasing in the width knob the
+# paper sweeps (segment width n for AC/ACL, booth span k for MMBS, mantissa
+# m for CSS) — and for the log family in compensation strength (NC -> LPC
+# -> HPC).  The union of the ladders is asserted to cover the whole
+# SWEEPABLE table, so a new design cannot silently dodge the property.
+
+LADDERS = {
+    "ac": ["AC3-3", "AC4-4", "AC5-5", "AC6-6", "AC7-7"],
+    "acl": ["ACL4", "ACL5", "ACL6"],
+    "mmbs": ["MMBS5", "MMBS6", "MMBS7"],
+    "css": ["CSS12", "CSS14", "CSS16", "CSS18"],
+    "log": ["NC", "LPC", "HPC"],
+}
+
+
+def test_ladders_cover_every_sweepable_design():
+    from repro.core.sweep import SWEEPABLE
+
+    assert set(SWEEPABLE) == {n for fam in LADDERS.values() for n in fam}
+
+
+@given(st.sampled_from(sorted(LADDERS)), st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_mred_monotone_non_increasing_in_width(family, seed):
+    from repro.core.metrics import mred
+
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-4, 4, 2000).astype(np.float32)
+    y = rng.uniform(-4, 4, 2000).astype(np.float32)
+    exact = x.astype(np.float64) * y.astype(np.float64)
+    errs = [mred(np.asarray(get_multiplier(n)(jnp.asarray(x), jnp.asarray(y))),
+                 exact) for n in LADDERS[family]]
+    for wide, narrow in zip(errs[1:], errs[:-1]):
+        # widening a segment keeps strictly more mantissa product bits;
+        # tiny relative slack absorbs sample noise at the 2e3-operand size
+        assert wide <= narrow * 1.001 + 1e-12, (family, errs)
+
+
+# ---- composed-error prediction brackets measured error ---------------------
+#
+# The sensitivity model's first-order composition (sum of alpha * local
+# MRED) must bracket the measured network MRED within stated factors on
+# random 2-4 layer linear stacks.  The bracket is asymmetric: the sum
+# composition deliberately over-predicts (independent per-layer errors
+# partially cancel — observed down to measured ~ pred/20), while MRED's
+# small-denominator tail can inflate the measured side (observed up to
+# ~13x over a 500-stack sweep); the stated factors carry ~2-3x headroom.
+
+BRACKET_OVER = 24.0    # measured <= pred * BRACKET_OVER
+BRACKET_UNDER = 64.0   # pred <= measured * BRACKET_UNDER
+
+
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_composed_error_prediction_brackets_measured(depth, passes, seed):
+    from repro.core import sensitivity
+    from repro.core.metrics import mred
+    from repro.core.numerics import NumericsConfig, nmatmul
+    from repro.core.policy import NumericsPolicy
+
+    exact_f32 = NumericsConfig(mode="exact", compute_dtype="float32")
+    rng = np.random.default_rng(seed)
+    dims = [int(rng.integers(8, 33)) for _ in range(depth + 1)]
+    ws = [jnp.asarray(rng.standard_normal((dims[i], dims[i + 1]))
+                      / np.sqrt(dims[i]), jnp.float32) for i in range(depth)]
+    x = jnp.asarray(rng.standard_normal((16, dims[0])), jnp.float32)
+
+    def fwd(pol):
+        h = x
+        for i, w in enumerate(ws):
+            h = nmatmul(h, w, pol, path=f"layer.{i}").astype(jnp.float32)
+        return h
+
+    def eval_fn(pol):
+        fwd(pol)
+        return 0.0
+
+    model = sensitivity.calibrate(eval_fn, default=exact_f32)
+    seg = NumericsConfig(mode="segmented", seg_passes=passes, backend="xla")
+    assignment = {f"layer.{i}": seg for i in range(depth)}
+    pred = model.predict(assignment)
+    pol = NumericsPolicy.from_assignments(assignment, default=exact_f32)
+    ref = np.asarray(fwd(NumericsPolicy((), default=exact_f32)), np.float64)
+    measured = mred(np.asarray(fwd(pol), np.float64), ref)
+    assert pred > 0 and measured > 0
+    assert measured <= pred * BRACKET_OVER, (depth, passes, pred, measured)
+    assert pred <= measured * BRACKET_UNDER, (depth, passes, pred, measured)
+
+
 @given(st.integers(1, 3), st.integers(2, 6), st.integers(2, 6))
 @settings(max_examples=30, deadline=None)
 def test_segmented_matmul_linearity(passes, m, n):

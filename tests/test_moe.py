@@ -1,4 +1,5 @@
-"""MoE dispatch correctness: vs dense reference, capacity, shared experts."""
+"""MoE dispatch correctness: vs dense reference, capacity, shared experts,
+and per-expert numerics paths (``expert{k}.{wi,wg,wo}``)."""
 import dataclasses
 
 import jax
@@ -6,24 +7,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch
 from repro.core.numerics import NumericsConfig
+from repro.core.policy import NumericsPolicy, PolicyRule, expert_paths
 from repro.models import moe as moe_mod
-from repro.models.layers import unzip
 
 NCFG = NumericsConfig(mode="exact", compute_dtype="float32")
-
-
-def _setup(E=4, K=2, T=24, D=16, FF=32, cf=8.0, n_shared=0, seed=0):
-    cfg_arch = get_arch("deepseek-v3-671b").reduced()
-    cfg = dataclasses.replace(
-        cfg_arch, d_model=D, d_ff=FF,
-        moe=dataclasses.replace(cfg_arch.moe, n_experts=E, top_k=K,
-                                capacity_factor=cf, n_shared=n_shared))
-    pp = moe_mod.moe_init(jax.random.PRNGKey(seed), cfg)
-    params, _ = unzip(pp)
-    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, T // 2, D), jnp.float32)
-    return cfg, params, x
+SEG1 = NumericsConfig(mode="segmented", seg_passes=1, backend="xla")
+SEG3 = NumericsConfig(mode="segmented", seg_passes=3, backend="xla")
 
 
 def _dense_reference(params, x, cfg):
@@ -51,24 +41,24 @@ def _dense_reference(params, x, cfg):
     return out.reshape(B, S, D)
 
 
-def test_moe_matches_dense_reference():
-    cfg, params, x = _setup()
+def test_moe_matches_dense_reference(small_moe):
+    cfg, params, x = small_moe(E=4, K=2, T=24, D=16, FF=32)
     got = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
     want = _dense_reference(params, x, cfg)
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
 
 
-def test_moe_top1():
-    cfg, params, x = _setup(K=1)
+def test_moe_top1(small_moe):
+    cfg, params, x = small_moe(E=4, K=1, T=24, D=16, FF=32)
     got = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
     want = _dense_reference(params, x, cfg)
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
 
 
-def test_capacity_drops_reduce_output_mass():
+def test_capacity_drops_reduce_output_mass(small_moe):
     """With a tiny capacity factor some tokens are dropped (their MoE output
     is zero) — output L2 must shrink vs generous capacity, never grow."""
-    cfg_hi, params, x = _setup(cf=8.0, T=64)
+    cfg_hi, params, x = small_moe(E=4, K=2, T=64, D=16, FF=32, cf=8.0)
     cfg_lo = dataclasses.replace(
         cfg_hi, moe=dataclasses.replace(cfg_hi.moe, capacity_factor=0.25))
     hi = np.asarray(moe_mod.moe_apply(params, x, cfg_hi, NCFG))
@@ -77,8 +67,8 @@ def test_capacity_drops_reduce_output_mass():
     assert not np.allclose(lo, hi)
 
 
-def test_shared_expert_always_on():
-    cfg, params, x = _setup(n_shared=1)
+def test_shared_expert_always_on(small_moe):
+    cfg, params, x = small_moe(E=4, K=2, T=24, D=16, FF=32, n_shared=1)
     got = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
     # zeroing the router keeps the shared-expert contribution
     params0 = dict(params)
@@ -92,10 +82,10 @@ def test_shared_expert_always_on():
     assert not np.allclose(got, got0)
 
 
-def test_gates_renormalized():
+def test_gates_renormalized(small_moe):
     """top-k gates sum to 1 after renormalization: scaling router logits by a
     constant shift leaves the output invariant."""
-    cfg, params, x = _setup()
+    cfg, params, x = small_moe(E=4, K=2, T=24, D=16, FF=32)
     got1 = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
     params2 = dict(params)
     params2["router"] = params["router"] + 3.0  # softmax shift-invariant anyway
@@ -113,3 +103,84 @@ def test_aux_loss_positive_and_uniform_minimum():
     eidx_peaked = jnp.argmax(logits_peaked, -1, keepdims=True)
     l_p = float(moe_mod.aux_load_balance_loss(logits_peaked, eidx_peaked, E))
     assert l_p > l_u * 0.9
+
+
+# ---------------------------------------------------------------------------
+# per-expert numerics paths
+# ---------------------------------------------------------------------------
+
+class _SpyPolicy(NumericsPolicy):
+    """Records every resolved (path, config)."""
+
+    def __post_init__(self):
+        super().__post_init__()
+        object.__setattr__(self, "seen", [])
+
+    def lookup(self, path):
+        cfg = super().lookup(path)
+        self.seen.append((path, cfg))
+        return cfg
+
+
+def test_expert_paths_enumeration():
+    assert expert_paths(2) == ("expert0.wi", "expert0.wg", "expert0.wo",
+                               "expert1.wi", "expert1.wg", "expert1.wo")
+    assert expert_paths(1, prefix="blocks.3.mlp") == (
+        "blocks.3.mlp.expert0.wi", "blocks.3.mlp.expert0.wg",
+        "blocks.3.mlp.expert0.wo")
+
+
+def test_routed_expert_configs_resolution():
+    pol = NumericsPolicy((PolicyRule("expert0.*", SEG1),), default=NCFG)
+    cfgs = moe_mod.routed_expert_configs(pol, 2)
+    assert cfgs["wi"] == (SEG1, NCFG) and cfgs["wo"] == (SEG1, NCFG)
+    # plain configs resolve identically for every expert
+    cfgs_plain = moe_mod.routed_expert_configs(SEG1, 3)
+    assert cfgs_plain["wg"] == (SEG1, SEG1, SEG1)
+
+
+def test_per_expert_policy_resolves_distinct_configs(small_moe):
+    """Acceptance: a mixed MoE forward resolves >= 2 distinct
+    NumericsConfigs across experts, and the output differs from all-exact."""
+    cfg, params, x = small_moe(E=2, K=1, T=16, D=16, FF=32)
+    pol = _SpyPolicy((PolicyRule("expert0.*", SEG1),
+                      PolicyRule("expert1.*", NCFG)), default=NCFG)
+    got = np.asarray(moe_mod.moe_apply(params, x, cfg, pol))
+    used = {c for p, c in pol.seen if p.startswith("expert")}
+    assert SEG1 in used and NCFG in used, used
+    exact = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
+    assert np.isfinite(got).all()
+    assert not np.allclose(got, exact)
+    # expert1 tokens are untouched (exact config == the fused-einsum math
+    # up to dot-strategy ulps); expert0 tokens carry the segmented error
+    assert np.abs(got - exact).max() > 1e-4
+
+
+def test_all_exact_expert_policy_bit_identical_to_plain(small_moe):
+    """Acceptance: a policy mapping every expert to ``exact`` keeps the
+    fused einsum datapath — bit-for-bit the plain-config output."""
+    cfg, params, x = small_moe(E=2, K=1, T=16, D=16, FF=32, n_shared=1)
+    pol = NumericsPolicy((PolicyRule("expert*", NCFG),
+                          PolicyRule("shared.*", NCFG)), default=NCFG)
+    got = np.asarray(moe_mod.moe_apply(params, x, cfg, pol))
+    want = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_uniform_segmented_policy_matches_plain_segmented(small_moe):
+    """A policy resolving every expert to SEG3 == the plain SEG3 config
+    (both take the per-expert nmatmul path with identical configs)."""
+    cfg, params, x = small_moe(E=2, K=1, T=16, D=16, FF=32)
+    pol = NumericsPolicy((), default=SEG3)
+    got = np.asarray(moe_mod.moe_apply(params, x, cfg, pol))
+    want = np.asarray(moe_mod.moe_apply(params, x, cfg, SEG3))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_per_expert_segmented_still_tracks_dense_reference(small_moe):
+    """Segmented-3 experts stay close to the float64 dense reference —
+    the approximate path must not silently break routing/combination."""
+    cfg, params, x = small_moe(E=4, K=2, T=24, D=16, FF=32)
+    got = np.asarray(moe_mod.moe_apply(params, x, cfg, SEG3))
+    want = _dense_reference(params, x, cfg)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)

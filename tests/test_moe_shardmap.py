@@ -3,39 +3,34 @@
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise;
 on a single-device host the mesh can't be built and the tests skip.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch
 from repro.core.numerics import NumericsConfig
+from repro.core.policy import NumericsPolicy, PolicyRule
 from repro.distributed.sharding import rules_for, use_mesh_rules
 from repro.models import moe as moe_mod
-from repro.models.layers import unzip
 
 NCFG = NumericsConfig(mode="exact", compute_dtype="float32")
+SEG3 = NumericsConfig(mode="segmented", seg_passes=3, backend="xla")
 
 
-def _setup():
+def _setup(small_moe):
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 host devices (XLA_FLAGS device count)")
     from repro.launch.mesh import make_test_mesh
 
-    cfg0 = get_arch("deepseek-v3-671b").reduced()
-    cfg = dataclasses.replace(
-        cfg0, moe=dataclasses.replace(cfg0.moe, n_experts=8, top_k=2,
-                                      capacity_factor=8.0))
-    pp = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
-    params, _ = unzip(pp)
-    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+    cfg, params, x = small_moe(E=8, K=2, T=64, D=16, FF=32, cf=8.0, B=4,
+                               seed=0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                          jnp.float32)
     return cfg, params, x, make_test_mesh((2, 4), ("data", "model"))
 
 
-def test_shardmap_matches_gspmd_forward():
-    cfg, params, x, mesh = _setup()
+def test_shardmap_matches_gspmd_forward(small_moe):
+    cfg, params, x, mesh = _setup(small_moe)
     ref = np.asarray(moe_mod.moe_apply(params, x, cfg, NCFG))
     with use_mesh_rules(mesh, rules_for(cfg, "train")):
         got = np.asarray(jax.jit(
@@ -43,8 +38,8 @@ def test_shardmap_matches_gspmd_forward():
     np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
 
 
-def test_shardmap_gradients_finite_and_match():
-    cfg, params, x, mesh = _setup()
+def test_shardmap_gradients_finite_and_match(small_moe):
+    cfg, params, x, mesh = _setup(small_moe)
 
     def loss(p, xx):
         return jnp.sum(moe_mod.moe_apply(p, xx, cfg, NCFG) ** 2)
@@ -56,3 +51,27 @@ def test_shardmap_gradients_finite_and_match():
         assert np.isfinite(np.asarray(a)).all()
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=5e-3, atol=5e-3)
+
+
+def test_shardmap_uniform_segmented_matches_gspmd(small_moe):
+    """Expert-uniform non-exact configs run per-local-expert nmatmul inside
+    the shard_map body and must agree with the (unsharded) GSPMD path."""
+    cfg, params, x, mesh = _setup(small_moe)
+    ref = np.asarray(moe_mod.moe_apply(params, x, cfg, SEG3))
+    with use_mesh_rules(mesh, rules_for(cfg, "train")):
+        got = np.asarray(jax.jit(
+            lambda p, xx: moe_mod.moe_apply(p, xx, cfg, SEG3))(params, x))
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_shardmap_heterogeneous_policy_falls_back_to_gspmd(small_moe):
+    """Expert-heterogeneous numerics cannot trace once across EP shards;
+    the shard_map entry must fall back to the GSPMD path and still match
+    the unsharded result."""
+    cfg, params, x, mesh = _setup(small_moe)
+    pol = NumericsPolicy((PolicyRule("expert0.*", SEG3),), default=NCFG)
+    ref = np.asarray(moe_mod.moe_apply(params, x, cfg, pol))
+    with use_mesh_rules(mesh, rules_for(cfg, "train")):
+        got = np.asarray(jax.jit(
+            lambda p, xx: moe_mod.moe_apply(p, xx, cfg, pol))(params, x))
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)

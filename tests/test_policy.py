@@ -275,7 +275,9 @@ def test_resnet_mixed_policy_forward():
 
 def test_auto_configure_meets_budget_below_exact_area():
     """Acceptance: the emitted policy meets the MRED budget at lower
-    modeled area than the all-exact baseline, and round-trips via JSON."""
+    modeled area than the all-exact baseline, and round-trips via JSON.
+    Pinned to the measured-error greedy method (the proxy's composed-model
+    semantics are covered by tests/test_sensitivity.py)."""
     cfg, params, state, images = _tiny_resnet()
     ref, _ = resnet.apply(params, state, images, cfg, train=False)
     ref = np.asarray(ref, np.float64)
@@ -288,7 +290,9 @@ def test_auto_configure_meets_budget_below_exact_area():
     budget = 5e-3
     res = sweep.auto_configure(eval_fn, resnet.layer_paths(cfg), budget,
                                candidates=[("segmented-1", SEG1),
-                                           ("segmented-3", SEG3)])
+                                           ("segmented-3", SEG3)],
+                               method="greedy")
+    assert res.method == "greedy" and res.predicted_error is None
     assert res.error <= budget
     assert res.area_um2 < res.baseline_area_um2
     assert res.assignments  # at least one layer went approximate
@@ -316,3 +320,46 @@ def test_pareto_candidates_are_on_frontier():
     assert names == pareto
     for _, c in cands:
         assert c.mode == "emulated"
+
+
+# ---------------------------------------------------------------------------
+# golden vectors: per-expert path resolution pinned against the independent
+# reference resolver (tests/golden/gen_policy_golden.py)
+# ---------------------------------------------------------------------------
+
+def _policy_golden():
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "golden",
+                        "policy_golden.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("case", _policy_golden()["resolution_cases"],
+                         ids=lambda c: c["label"])
+def test_expert_path_resolution_golden(case):
+    tags = _policy_golden()["config_tags"]
+    cfg_of = {tag: NumericsConfig(**d) for tag, d in tags.items()}
+    tag_of = {v: k for k, v in cfg_of.items()}
+    pol = NumericsPolicy(
+        tuple(PolicyRule(pat, cfg_of[tag]) for pat, tag in case["rules"]),
+        default=cfg_of[case["default"]])
+    for path, want_tag in case["expected"].items():
+        got = pol.lookup(path)
+        assert tag_of[got] == want_tag, (path, tag_of[got], want_tag)
+
+
+def test_resolution_golden_covers_expert_multiplicity():
+    """The golden file must exercise >= 2 experts and >= 2 distinct
+    non-default tags across its cases (guards fixture rot)."""
+    data = _policy_golden()
+    experts = set()
+    tags = set()
+    for case in data["resolution_cases"]:
+        for path, tag in case["expected"].items():
+            if ".expert" in path:
+                experts.add(path.split(".expert")[1].split(".")[0])
+            tags.add(tag)
+    assert len(experts) >= 2 and len(tags - {"exact"}) >= 2
