@@ -127,21 +127,16 @@ EXPERIMENTS = {
 
 def run_experiment(tag: str):
     from repro.configs import get_arch
-    from repro.launch import dryrun, specs
+    from repro.launch import dryrun
+    from repro.session import Session
 
     arch, shape, transform, hypothesis = EXPERIMENTS[tag]
-    cfg = specs.cell_config(get_arch(arch), shape)
+    cfg = get_arch(arch)
     if transform is not None:
-        # monkeypatch get_arch inside dryrun.lower_cell via a shim config
-        import repro.launch.dryrun as dr
-
-        orig = dr.get_arch
-        dr.get_arch = lambda a: transform(orig(a))
-    try:
-        rec = dryrun.lower_cell(arch, shape, multi_pod=False)
-    finally:
-        if transform is not None:
-            dr.get_arch = orig
+        cfg = transform(cfg)
+    # a Session over the transformed full-size config IS the experiment
+    # spec — no get_arch monkeypatching needed
+    rec = dryrun.lower_session_cell(Session(cfg), shape, multi_pod=False)
     rec["tag"] = tag
     rec["hypothesis"] = hypothesis
     os.makedirs(ART, exist_ok=True)

@@ -7,8 +7,10 @@ with every conv/fc product routed through the approximate multiplier
 (bit-level emulation, im2col + afpm_matmul_emulated).  Reported: MRED/NMED
 of the multiplier itself plus Top-1 accuracy vs the exact baseline.
 
-``--auto BUDGET`` additionally runs the per-layer auto-configurer
-(``repro.core.sweep.auto_configure``) against a calibration batch and
+All inference routes through :class:`repro.session.Session`.  ``--auto
+BUDGET`` additionally runs the per-layer auto-configurer
+(``Session.auto_configure`` -> ``repro.core.sweep.auto_configure``)
+against a calibration batch and
 emits a NumericsPolicy meeting the logits-MRED budget at minimum modeled
 area (``--out`` saves it as JSON for ``repro.launch.serve --policy``).
 ``--method proxy`` (default) spends one instrumented calibration pass on
@@ -18,14 +20,12 @@ the composed-error sensitivity model (``repro.core.sensitivity``);
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sweep
 from repro.core.metrics import mred, nmed, top_k_accuracy
 from repro.core.numerics import NumericsConfig
 from repro.core.registry import get_multiplier
@@ -33,6 +33,7 @@ from repro.data.synthetic import DataConfig, cifar_like
 from repro.models import resnet
 from repro.models.layers import unzip
 from repro.optim import adamw
+from repro.session import Session
 
 # paper Table IV values for side-by-side printing
 PAPER = {
@@ -90,7 +91,8 @@ def run(csv_rows=None, train_steps=120, eval_n=48):
     ys = rng.uniform(-4, 4, 100_000).astype(np.float32)
     exact_prod = xs.astype(np.float64) * ys.astype(np.float64)
 
-    logits_exact, _ = resnet.apply(params, state, images, cfg, train=False)
+    sess = Session.from_resnet(cfg, params, state)
+    logits_exact = sess.apply(images)
     top1_exact = top_k_accuracy(logits_exact, labels, 1)
     print(f"{'design':8s} {'MRED':>9s} {'paperM':>9s} {'NMED':>9s} "
           f"{'top1':>6s} {'d_top1':>7s} {'agree%':>7s}")
@@ -106,8 +108,7 @@ def run(csv_rows=None, train_steps=120, eval_n=48):
         ncfg = NumericsConfig(mode="emulated", multiplier=name,
                               seg_n=int(name[2]) if name.startswith("AC") and
                               name[2].isdigit() else 5)
-        acfg = dataclasses.replace(cfg, numerics=ncfg)
-        logits, _ = resnet.apply(params, state, images, acfg, train=False)
+        logits = sess.replace(policy=ncfg).apply(images)
         top1 = top_k_accuracy(logits, labels, 1)
         agree = float(np.mean(np.argmax(np.asarray(logits), -1) == pred_exact))
         dt = (time.perf_counter() - t0) * 1e6
@@ -119,13 +120,6 @@ def run(csv_rows=None, train_steps=120, eval_n=48):
                              f"mred={m:.2e};top1_delta={float(top1-top1_exact):+.3f}"))
     print("paper-claim check: AC4-4/5-5/6-6 should show ~zero top-1 drop; "
           "NC the largest drop (Table IV).")
-
-
-SEGMENTED_CANDIDATES = [
-    ("segmented-1", NumericsConfig(mode="segmented", seg_passes=1, backend="xla")),
-    ("segmented-2", NumericsConfig(mode="segmented", seg_passes=2, backend="xla")),
-    ("segmented-3", NumericsConfig(mode="segmented", seg_passes=3, backend="xla")),
-]
 
 
 def run_auto(budget=1e-2, train_steps=120, calib_n=32, candidates="segmented",
@@ -148,29 +142,26 @@ def run_auto(budget=1e-2, train_steps=120, calib_n=32, candidates="segmented",
     dcfg = DataConfig(global_batch=calib_n, seed=123)
     calib = cifar_like(dcfg, 20_000, n=calib_n)
     images = jnp.asarray(calib["images"])
-    ref, _ = resnet.apply(params, state, images, cfg, train=False)
-    ref = np.asarray(ref, np.float64)
 
-    def eval_fn(policy):
-        acfg = dataclasses.replace(cfg, numerics=policy)
-        logits, _ = resnet.apply(params, state, images, acfg, train=False)
-        return mred(np.asarray(logits), ref)
-
-    cand = SEGMENTED_CANDIDATES if candidates == "segmented" else None
-    res = sweep.auto_configure(eval_fn, resnet.layer_paths(cfg), budget,
-                               candidates=cand, verbose=True, method=method)
+    sess = Session.from_resnet(cfg, params, state)
+    # exact reference before the session adopts the emitted policy (only
+    # the proxy needs it, for the one verification eval outside the
+    # configurator)
+    ref = (np.asarray(sess.apply(images), np.float64)
+           if method == "proxy" else None)
+    res = sess.auto_configure(budget, calib=images, candidates=candidates,
+                              method=method, verbose=True)
     err_kind = "composed" if res.method == "proxy" else "measured"
     print(f"[auto] {err_kind} error={res.error:.3e} (budget {budget:g})  "
           f"area {res.area_um2:,.0f} um^2 vs exact {res.baseline_area_um2:,.0f} "
           f"(-{res.area_reduction:.1%})  [{res.n_evals} calibration evals]")
     if res.method == "proxy":
-        print(f"[auto] measured error of emitted policy: "
-              f"{eval_fn(res.policy):.3e}")
+        measured = mred(np.asarray(sess.apply(images)), ref)
+        print(f"[auto] measured error of emitted policy: {measured:.3e}")
     for path, name in res.assignments:
         print(f"  {path:16s} -> {name}")
     if out:
-        with open(out, "w") as f:
-            f.write(res.policy.to_json())
+        sess.save_policy(out)
         print(f"[auto] policy written to {out} (rule paths are this ResNet's "
               f"layers; schema + LM-serving policies: docs/numerics_policy.md)")
     return res

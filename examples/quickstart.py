@@ -12,8 +12,8 @@ import numpy as np
 from repro.core import ppa
 from repro.core.afpm import AFPMConfig, afpm_mult_f32
 from repro.core.metrics import mred
-from repro.core.numerics import NumericsConfig, nmatmul
 from repro.core.registry import available, get_multiplier
+from repro.numerics import NumericsConfig, nmatmul, numerics_scope
 
 print("== 1. one multiply, many multipliers ==")
 x, y = jnp.float32(3.14159), jnp.float32(-2.71828)
@@ -36,11 +36,13 @@ for n in (4, 5, 6):
 print("\n== 3. the numerics knob on a matmul (compiler integration) ==")
 X = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
 W = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
-ref = np.asarray(nmatmul(X, W, NumericsConfig(mode="exact", compute_dtype="float32")))
+with numerics_scope(NumericsConfig(mode="exact", compute_dtype="float32")):
+    ref = np.asarray(nmatmul(X, W))
 for cfg in [NumericsConfig(mode="emulated", multiplier="AC5-5", seg_n=5),
             NumericsConfig(mode="segmented", seg_passes=3, backend="xla"),
             NumericsConfig(mode="segmented", seg_passes=1, backend="xla")]:
-    got = np.asarray(nmatmul(X, W, cfg))
+    with numerics_scope(cfg):           # precision is ambient, not an argument
+        got = np.asarray(nmatmul(X, W))
     err = np.abs(got - ref).mean() / np.abs(ref).mean()
     label = cfg.multiplier if cfg.mode == "emulated" else f"segmented-{cfg.seg_passes}"
     print(f"   {cfg.mode:9s} {label:12s}: mean rel err {err:.2e}")

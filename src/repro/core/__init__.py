@@ -7,13 +7,15 @@ Public surface:
   baselines    — MMBS / CSS / NC-LPC-HPC comparison designs
   registry     — named multiplier library (the OpenACM operator library role)
   numerics     — NumericsConfig + nmatmul dispatch (compiler integration)
+  scope        — thread-local numerics_scope/layer_scope stacks (the
+                 ambient-configuration machinery behind repro.numerics)
   policy       — per-layer NumericsPolicy (glob rules over layer paths)
   sweep        — accuracy-PPA sweep + budget-driven auto-configuration
   metrics      — MRED / NMED / PSNR / top-k
   ppa          — analytical gate-equivalent PPA model (Table II stand-in)
 """
 from . import (afpm, baselines, exact_mult, formats, metrics, numerics,
-               policy, ppa, registry)
+               policy, ppa, registry, scope)
 from .afpm import AFPMConfig, afpm_matmul_emulated, afpm_mult_f32
 from .numerics import EXACT, NumericsConfig, nmatmul, segmented_matmul_xla
 from .policy import NumericsPolicy, PolicyRule
@@ -39,5 +41,6 @@ __all__ = [
     "policy",
     "ppa",
     "registry",
+    "scope",
     "segmented_matmul_xla",
 ]

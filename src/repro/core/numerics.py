@@ -26,18 +26,26 @@ Modes
                    what tests use to validate the kernels on CPU)
     ``xla``        force the pure-jnp reference implementation
 
-Per-layer configuration lives one level up: ``repro.core.policy`` maps
-layer paths (glob rules) to NumericsConfigs, and :func:`nmatmul` accepts
-either a single config or a policy plus the call site's ``path``.
+Configuration is *ambient*: ``repro.core.scope`` provides the
+``numerics_scope`` / ``layer_scope`` context managers (public surface:
+``repro.numerics``), and :func:`nmatmul` with no extra arguments resolves
+its config from the innermost scope and its full layer path from the
+scope stack.  Per-layer policies (``repro.core.policy``: glob rules over
+layer paths) plug in as the scoped value.  The legacy explicit form
+``nmatmul(x, w, cfg, path=...)`` still works for one release behind a
+:class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
 import dataclasses
+import sys
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from . import scope as _scope
 from .afpm import AFPMConfig, afpm_matmul_emulated
 from .registry import get_elementwise, get_multiplier
 
@@ -113,26 +121,83 @@ def segmented_matmul_xla(x, w, passes: int = 3):
     return ref.afpm_matmul_ref(x, w, passes)
 
 
-def nmatmul(x: jax.Array, w: jax.Array, cfg: Optional[NumericsConfig] = None,
-            path: str = ""):
-    """Numerics-aware matmul: ``x @ w`` under the configured multiplier.
+# call sites (by code location) that already emitted the one-per-site
+# nmatmul deprecation warning; repro.numerics.reset_deprecation_registry
+# clears it (tests)
+_DEPRECATED_SITES: set = set()
 
-    ``cfg`` may be a plain :class:`NumericsConfig` (``path`` is ignored) or
-    a ``repro.core.policy`` policy/scoped-policy, in which case the config
-    is resolved per call site from the layer ``path`` — this is what lets
-    one forward pass run different numerics in different layers.
+
+def _warn_deprecated_nmatmul():
+    frame = sys._getframe(2)  # the nmatmul caller
+    site = (frame.f_code.co_filename, frame.f_lineno)
+    if site in _DEPRECATED_SITES:
+        return
+    _DEPRECATED_SITES.add(site)
+    warnings.warn(
+        "nmatmul(x, w, cfg, path=...) is deprecated; wrap the call in "
+        "repro.numerics.numerics_scope(cfg) / layer_scope(name) and call "
+        "nmatmul(x, w) — the explicit form will be removed next release",
+        DeprecationWarning, stacklevel=3)
+
+
+def nmatmul(x: jax.Array, w: jax.Array, cfg: Optional[NumericsConfig] = None,
+            path: Optional[str] = None):
+    """Numerics-aware matmul: ``x @ w`` under the ambient numerics scope.
+
+    The config comes from the innermost ``repro.numerics.numerics_scope``
+    (EXACT outside any scope); for policies it is resolved per call site
+    against the full layer path of the active ``layer_scope`` stack — this
+    is what lets one forward pass run different numerics in different
+    layers without threading arguments.
+
+    Deprecated form: ``cfg`` (config or policy/scoped-policy) and ``path``
+    may still be passed explicitly; an explicit ``cfg`` shadows any
+    ambient scope, while ``path`` alone resolves the ambient scope at that
+    leaf (like an inline ``layer_scope``).  Both warn once per call site
+    and will be removed one release after 2026-07.
     """
+    if cfg is None and path is None:
+        amb = _scope.current_numerics()
+        rel = _scope.current_path()
+        # a scoped-policy ambient (e.g. block_apply(ncfg=policy.scope(...)))
+        # carries a prefix: the tap must see the absolute path even though
+        # resolution below stays relative (ScopedPolicy.lookup joins it)
+        full = amb.full_path(rel) if hasattr(amb, "full_path") else rel
+        if amb is None:
+            resolved = EXACT
+        elif isinstance(amb, NumericsConfig):
+            resolved = amb
+        else:
+            resolved = amb.lookup(rel)
+    else:
+        _warn_deprecated_nmatmul()
+        path = path or ""
+        if cfg is None:
+            # path-only call (half-migrated site): treat the path as an
+            # inline layer_scope leaf and resolve the ambient scope there —
+            # silently dropping an active policy would skew results
+            amb = _scope.current_numerics()
+            rel = _scope.current_path(path)
+            full = amb.full_path(rel) if hasattr(amb, "full_path") else rel
+            if amb is None:
+                resolved = EXACT
+            elif isinstance(amb, NumericsConfig):
+                resolved = amb
+            else:
+                resolved = amb.lookup(rel)
+        else:
+            # full path: a scoped policy knows its prefix; plain configs
+            # report the caller-supplied (relative) path verbatim
+            full = cfg.full_path(path) if hasattr(cfg, "full_path") else path
+            if isinstance(cfg, NumericsConfig):
+                resolved = cfg
+            else:
+                resolved = cfg.lookup(path)  # NumericsPolicy / ScopedPolicy
+                # (duck-typed to keep core.numerics import-cycle-free)
     if _OPERAND_TAP is not None and not (
             isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer)):
-        # full path: a scoped policy knows its prefix; plain configs report
-        # the caller-supplied (relative) path verbatim
-        full = cfg.full_path(path) if hasattr(cfg, "full_path") else path
         _OPERAND_TAP(full, x, w)
-    if cfg is None:
-        cfg = EXACT
-    elif not isinstance(cfg, NumericsConfig):
-        cfg = cfg.lookup(path)  # NumericsPolicy / ScopedPolicy (duck-typed
-        # here to keep core.numerics import-cycle-free; see core/policy.py)
+    cfg = resolved
     if cfg.mode == "exact":
         dt = jnp.dtype(cfg.compute_dtype)
         return jax.lax.dot_general(

@@ -1,0 +1,137 @@
+"""Dynamic numerics scoping — precision as an ambient property of a region.
+
+The paper's framing (and OpenACM/OpenACMv2's) is that accuracy
+configuration is *compiler* state: a region of the program runs under a
+multiplier configuration, not every multiply carrying its own argument.
+This module is that region mechanism: a thread-local stack of ambient
+:class:`~repro.core.policy.Numerics` values plus a thread-local *path
+stack* of layer-name segments.  ``nmatmul(x, w)`` with no arguments
+resolves its config from the innermost :func:`numerics_scope` and its
+full layer path from the joined :func:`layer_scope` stack.
+
+Transform safety
+----------------
+Scopes are ordinary Python context managers, and resolution happens at
+**trace time**: when ``jax.jit`` / ``jax.lax.scan`` / ``jax.vmap`` traces
+a function, the ``with`` blocks execute during the trace and every
+``nmatmul`` bakes its resolved config into the jaxpr.  Nothing dynamic
+survives into the compiled computation, so scoped code jits, scans and
+vmaps exactly like explicitly-configured code (see
+``tests/test_scopes.py``).  ``jax.checkpoint`` traces its body once at
+call time (the backward pass replays the jaxpr, not the Python), so
+remat'ed blocks resolve consistently too.
+
+The flip side of trace-time resolution: the ambient scope is **not part
+of a jit cache key**.  A function jitted once and re-invoked under a
+*different* ``numerics_scope`` hits the compiled cache and keeps the
+first trace's numerics.  Enter the scope *inside* the jitted function
+from a value the jit re-traces on (the model zoo's pattern: entry points
+build a fresh ``jax.jit`` closure per config — ``Session.generate``,
+``transformer.backbone`` closing over ``cfg.numerics``), or jit per
+scope.  Never hoist one jitted callable across scopes expecting it to
+re-resolve.
+
+The stacks are ``threading.local``: concurrent sessions in different
+threads cannot observe each other's scopes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+__all__ = [
+    "ambient_view",
+    "current_numerics",
+    "current_path",
+    "layer_scope",
+    "maybe_numerics_scope",
+    "numerics_scope",
+    "resolve_here",
+]
+
+
+class _ScopeState(threading.local):
+    def __init__(self):
+        self.numerics = []   # stack of ambient Numerics (config or policy)
+        self.path = []       # stack of layer-path segments
+
+
+_STATE = _ScopeState()
+
+
+@contextlib.contextmanager
+def numerics_scope(numerics):
+    """Make ``numerics`` (a NumericsConfig or NumericsPolicy) ambient.
+
+    Every ``nmatmul(x, w)`` inside the block resolves against it; nested
+    scopes shadow outer ones (innermost wins), so a resolved plain config
+    can locally override an outer policy — e.g. the uniform-config expert
+    body inside a shard_map under a per-layer policy.
+    """
+    _STATE.numerics.append(numerics)
+    try:
+        yield numerics
+    finally:
+        _STATE.numerics.pop()
+
+
+def maybe_numerics_scope(numerics):
+    """``numerics_scope(numerics)``, or a no-op when ``numerics`` is None —
+    the plumbing helper for entry points with an optional override."""
+    if numerics is None:
+        return contextlib.nullcontext()
+    return numerics_scope(numerics)
+
+
+@contextlib.contextmanager
+def layer_scope(name):
+    """Push one layer-path segment (dotted names allowed: ``blocks.3``).
+
+    The full path of a call site is the dot-join of every active
+    ``layer_scope`` — ``blocks.3`` → ``attn`` → ``wq`` resolves as
+    ``blocks.3.attn.wq`` against the ambient policy.
+    """
+    _STATE.path.append(str(name))
+    try:
+        yield
+    finally:
+        _STATE.path.pop()
+
+
+def current_numerics():
+    """The innermost ambient Numerics, or None outside any scope."""
+    return _STATE.numerics[-1] if _STATE.numerics else None
+
+
+def current_path(leaf: str = "") -> str:
+    """Dot-joined layer path of the active ``layer_scope`` stack
+    (+ ``leaf`` appended when given)."""
+    parts = [p for p in _STATE.path if p]
+    if leaf:
+        parts.append(leaf)
+    return ".".join(parts)
+
+
+def resolve_here(leaf: str = ""):
+    """Concrete NumericsConfig at the current scope (+ optional ``leaf``).
+
+    Equivalent to ``policy.resolve(current_numerics(), current_path(leaf))``
+    — EXACT when no scope is active.
+    """
+    from .policy import resolve  # deferred: policy imports core.numerics
+
+    return resolve(current_numerics(), current_path(leaf))
+
+
+def ambient_view():
+    """The ambient numerics as a view rooted at the current path: a
+    ScopedPolicy for policies (so relative lookups like ``expert3.wi``
+    resolve under the full path), the config itself for plain configs,
+    None outside any scope."""
+    from .policy import scoped  # deferred: policy imports core.numerics
+
+    amb = current_numerics()
+    if amb is None:
+        return None
+    prefix = current_path()
+    return scoped(amb, prefix) if prefix else amb

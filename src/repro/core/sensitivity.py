@@ -46,6 +46,7 @@ import numpy as np
 from .metrics import mred
 from .numerics import EXACT, NumericsConfig, nmatmul, set_operand_tap
 from .policy import NumericsPolicy
+from .scope import numerics_scope
 
 # bounded per-site operand sample: rows of x, columns of w (strided —
 # deterministic, so calibration and its golden fixtures are reproducible)
@@ -146,8 +147,9 @@ class SensitivityModel:
         if key not in self._local:
             r = self.sites[path]
             exact = r.x.astype(np.float64) @ r.w.astype(np.float64)
-            approx = np.asarray(
-                nmatmul(jnp.asarray(r.x), jnp.asarray(r.w), cfg), np.float64)
+            with numerics_scope(cfg):
+                approx = np.asarray(
+                    nmatmul(jnp.asarray(r.x), jnp.asarray(r.w)), np.float64)
             self._local[key] = mred(approx, exact)
         return self._local[key]
 

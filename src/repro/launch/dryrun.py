@@ -26,7 +26,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import get_arch, list_archs  # noqa: E402
+from repro.configs import list_archs  # noqa: E402
 from repro.distributed.sharding import (rules_for, tree_shardings,  # noqa: E402
                                         use_mesh_rules)
 from repro.launch import hlo_analysis, specs, steps  # noqa: E402
@@ -51,8 +51,24 @@ def _mem_dict(mem):
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool):
-    """Build + lower + compile one cell; returns the result record."""
-    cfg = specs.cell_config(get_arch(arch), shape_name)
+    """Build + lower + compile one cell; returns the result record.
+
+    Thin wrapper: assembles a full-size :class:`repro.session.Session` and
+    delegates to :func:`lower_session_cell` (``Session.dryrun`` is the
+    same entry point with a policy/backend override attached)."""
+    from repro.session import Session
+
+    return lower_session_cell(Session(arch, reduced=False), shape_name,
+                              multi_pod)
+
+
+def lower_session_cell(session, shape_name: str, multi_pod: bool):
+    """Lower + compile one (session x shape x mesh) cell — the engine
+    behind ``Session.dryrun`` and the dryrun CLI.  The session carries the
+    arch, numerics policy and backend; the shape and mesh select the
+    workload cell."""
+    arch = session.arch_id
+    cfg = specs.cell_config(session.config, shape_name)
     ok, reason = specs.shape_applicable(cfg, shape_name)
     if not ok:
         return {"arch": arch, "shape": shape_name,
@@ -119,7 +135,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
     mem = compiled.memory_analysis()
     hlo_text = compiled.as_text()
     cost = hlo_analysis.loop_aware_cost(hlo_text)
-    cost["xla_flops"] = compiled.cost_analysis().get("flops", 0.0)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jaxlib: one dict per device
+        ca = ca[0] if ca else {}
+    cost["xla_flops"] = ca.get("flops", 0.0)
     coll = hlo_analysis.collective_bytes(hlo_text)
     mflops = specs.model_flops(cfg, shape_name)
     # numerics-aware compute term: segmented multipliers skip MXU passes,

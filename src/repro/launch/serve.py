@@ -1,91 +1,47 @@
-"""Serving driver: batched prefill + decode loop with the numerics knob.
+"""Serving driver: a thin CLI over :class:`repro.session.Session`.
 
 Demonstrates the paper's accuracy-configurable serving: the same weights
 served under exact / segmented-3 / segmented-1 (ACL-like) numerics, with
 per-request greedy decoding.  ``--policy policy.json`` serves under a
 per-layer :class:`~repro.core.policy.NumericsPolicy` (e.g. one emitted by
-``repro.core.sweep.auto_configure``; schema in ``docs/numerics_policy.md``)
-instead of a single global setting, and prints the modeled area / power /
-compute-latency of the resolved policy (Table II roll-up over every call
-site — per-expert MoE paths included — plus the MXU-pass roofline scale
-from ``repro.launch.hlo_analysis.policy_ppa_summary``).
+``Session.auto_configure`` / ``repro.core.sweep.auto_configure``; schema
+in ``docs/numerics_policy.md``) instead of a single global setting, and
+prints the modeled area / power / compute-latency of the resolved policy
+(Table II roll-up over every call site — per-expert MoE paths included —
+plus the MXU-pass roofline scale, via ``Session.ppa_report``).
+
+A malformed or missing ``--policy`` file exits with a one-line error and
+a non-zero status (no traceback).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
+import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch
-from repro.core.numerics import NumericsConfig
-from repro.core.policy import NumericsPolicy
-from repro.launch import hlo_analysis
-from repro.models import transformer
-from repro.models.layers import unzip
+from repro.session import Session, SessionError, print_ppa_report
 
 
 def serve(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
           gen_len: int = 16, numerics: str = "exact", seed: int = 0,
           params=None, cfg=None, policy=None):
-    if cfg is None:
-        cfg = get_arch(arch).reduced()
+    """Serve ``arch`` (or a ready config + params) and return the greedy
+    continuations as an int array.  ``numerics`` is a preset name;
+    ``policy`` (a NumericsPolicy or a JSON path) overrides it."""
+    sess = Session(cfg if cfg is not None else arch,
+                   policy=policy if policy is not None else numerics,
+                   seed=seed, params=params)
+    label = "policy" if policy is not None else numerics
     if policy is not None:
-        # per-layer policy: a NumericsPolicy, or a path to its JSON file
-        if not isinstance(policy, NumericsPolicy):
-            with open(policy) as f:
-                policy = NumericsPolicy.from_json(f.read())
-        cfg = dataclasses.replace(cfg, numerics=policy)
-        numerics = "policy"
-        # modeled PPA + latency of the resolved policy over every call site
-        # (per-expert MoE paths included), via the Table II roll-up and the
-        # MXU-pass roofline term
-        paths = transformer.layer_paths(cfg)
-        ppa = hlo_analysis.policy_ppa_summary(
-            policy, paths, counts=transformer.layer_path_counts(cfg))
-        print(f"[serve] policy over {ppa['n_sites']} call sites: "
-              f"area {ppa['area_um2']:,.0f} um^2 "
-              f"(-{ppa['area_reduction']:.1%} vs exact), "
-              f"power {ppa['power_w']:.3f} W "
-              f"(-{ppa['power_reduction']:.1%}), "
-              f"modeled compute latency x{ppa['compute_scale']:.2f}")
-    elif numerics != "exact":
-        passes = {"segmented3": 3, "segmented2": 2, "segmented1": 1}[numerics]
-        cfg = dataclasses.replace(cfg, numerics=NumericsConfig(
-            mode="segmented", seg_passes=passes, backend="xla"))
-    if params is None:
-        pp = transformer.init(cfg, jax.random.PRNGKey(seed))
-        params, _ = unzip(pp)
-
-    rng = np.random.default_rng(seed)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)
-    max_len = prompt_len + gen_len
-
-    prefill = jax.jit(lambda p, b: transformer.prefill(p, cfg, b, max_len=max_len))
-    decode = jax.jit(
-        lambda p, tok, st, pos: transformer.decode_step(p, cfg, {"token": tok}, st, pos))
-
-    t0 = time.perf_counter()
-    logits, state = prefill(params, {"tokens": prompts})
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out = [tok]
-    for i in range(gen_len - 1):
-        logits, state = decode(params, tok, state, jnp.int32(prompt_len + i))
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    gen = jnp.concatenate(out, axis=1)
-    tps = batch * gen_len / dt
-    print(f"[serve] {arch} numerics={numerics}: {batch}x{gen_len} tokens "
-          f"in {dt:.2f}s ({tps:.1f} tok/s)")
-    return np.asarray(gen)
+        print_ppa_report(sess.ppa_report(), tag="serve")
+    res = sess.generate(batch=batch, prompt_len=prompt_len, gen_len=gen_len)
+    print(f"[serve] {arch} numerics={label}: {batch}x{gen_len} tokens "
+          f"in {res.seconds:.2f}s ({res.tokens_per_s:.1f} tok/s)")
+    return np.asarray(res.tokens)
 
 
-def main():
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--numerics", default="exact",
@@ -95,10 +51,15 @@ def main():
     ap.add_argument("--policy", default=None, metavar="POLICY_JSON",
                     help="serve under a per-layer NumericsPolicy (JSON file; "
                          "overrides --numerics)")
-    args = ap.parse_args()
-    serve(args.arch, batch=args.batch, gen_len=args.gen_len,
-          numerics=args.numerics, policy=args.policy)
+    args = ap.parse_args(argv)
+    try:
+        serve(args.arch, batch=args.batch, gen_len=args.gen_len,
+              numerics=args.numerics, policy=args.policy)
+    except SessionError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

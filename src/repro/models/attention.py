@@ -4,10 +4,10 @@ Numerics: q/k/v/o projections route through ``nmatmul`` (the paper's
 configurable multiplier); the score/PV einsums stay in bf16/fp32 — the CiM
 deployment model puts the approximate multipliers in the stationary-weight
 arrays, while attention's activation-activation products run on the
-(exact) digital datapath.  ``ncfg`` may be a per-layer policy view scoped
-to this block's ``attn``/``cross`` prefix (see ``repro.core.policy``);
-projection call sites carry relative paths (``wq``/``wk``/``wv``/``wo``,
-MLA: ``wq_a``/``wq_b``/``wkv_a``/``wo``).
+(exact) digital datapath.  Configuration is ambient (``repro.numerics``):
+the caller establishes the block's ``attn``/``cross`` scope and each
+projection resolves under its own ``layer_scope`` segment
+(``wq``/``wk``/``wv``/``wo``, MLA: ``wq_a``/``wq_b``/``wkv_a``/``wo``).
 
 Memory: training/prefill attention is blockwise (online softmax over KV
 chunks inside a scan over Q chunks), so the score matrix never
@@ -24,7 +24,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.numerics import NumericsConfig, nmatmul
+from repro.numerics import layer_scope, nmatmul
 from repro.distributed.sharding import logical_constraint
 
 from .layers import PP, apply_rope, dense_init, rmsnorm, rmsnorm_init, softcap
@@ -245,14 +245,17 @@ def _blockwise_bwd(causal, window, attn_cap, q_chunk, kv_chunk, q_offset,
 _blockwise_attention_cv.defvjp(_blockwise_fwd, _blockwise_bwd)
 
 
-def gqa_apply(params, x, cfg, spec, positions, ncfg: NumericsConfig,
+def gqa_apply(params, x, cfg, spec, positions,
               cache=None, q_offset=0, causal=True, use_rope=True):
     """Returns (out, new_cache).  cache = dict(k, v) with (B, S_max, KH, D)."""
     B, S, d = x.shape
     H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q = nmatmul(x, params["wq"], ncfg, path="wq").reshape(B, S, H, hd)
-    k = nmatmul(x, params["wk"], ncfg, path="wk").reshape(B, S, KH, hd)
-    v = nmatmul(x, params["wv"], ncfg, path="wv").reshape(B, S, KH, hd)
+    with layer_scope("wq"):
+        q = nmatmul(x, params["wq"]).reshape(B, S, H, hd)
+    with layer_scope("wk"):
+        k = nmatmul(x, params["wk"]).reshape(B, S, KH, hd)
+    with layer_scope("wv"):
+        v = nmatmul(x, params["wv"]).reshape(B, S, KH, hd)
     if cfg.qk_norm:
         q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
@@ -290,7 +293,8 @@ def gqa_apply(params, x, cfg, spec, positions, ncfg: NumericsConfig,
         new_cache = {"k": k_cache, "v": v_cache}
 
     out = out.astype(x.dtype).reshape(B, S, H * hd)
-    return nmatmul(out, params["wo"], ncfg, path="wo").astype(x.dtype), new_cache
+    with layer_scope("wo"):
+        return nmatmul(out, params["wo"]).astype(x.dtype), new_cache
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, attn_cap=None):
@@ -344,7 +348,7 @@ def mla_init(key, cfg):
     }
 
 
-def mla_apply(params, x, cfg, spec, positions, ncfg, cache=None, q_offset=0):
+def mla_apply(params, x, cfg, spec, positions, cache=None, q_offset=0):
     """MLA with latent KV cache (the 93%-smaller cache of deepseek-v3).
 
     cache = dict(ckv (B,S,r), kpe (B,S,dr)).
@@ -353,13 +357,16 @@ def mla_apply(params, x, cfg, spec, positions, ncfg, cache=None, q_offset=0):
     H, m = cfg.n_heads, cfg.mla
     dn, dr, dv, r = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, m.kv_lora_rank
 
-    q = nmatmul(x, params["wq_a"], ncfg, path="wq_a")
+    with layer_scope("wq_a"):
+        q = nmatmul(x, params["wq_a"])
     q = rmsnorm(params["q_a_norm"], q.astype(x.dtype), cfg.norm_eps)
-    q = nmatmul(q, params["wq_b"], ncfg, path="wq_b").reshape(B, S, H, dn + dr)
+    with layer_scope("wq_b"):
+        q = nmatmul(q, params["wq_b"]).reshape(B, S, H, dn + dr)
     q_nope, q_pe = q[..., :dn], q[..., dn:]
     q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
 
-    kv = nmatmul(x, params["wkv_a"], ncfg, path="wkv_a")
+    with layer_scope("wkv_a"):
+        kv = nmatmul(x, params["wkv_a"])
     ckv, k_pe = kv[..., :r], kv[..., r:]
     ckv = rmsnorm(params["kv_a_norm"], ckv.astype(x.dtype), cfg.norm_eps)
     k_pe = apply_rope(k_pe.reshape(B, S, 1, dr), positions, cfg.rope_theta)
@@ -408,7 +415,8 @@ def mla_apply(params, x, cfg, spec, positions, ncfg, cache=None, q_offset=0):
         new_cache = {"ckv": ckv_c, "kpe": kpe_c}
 
     out = out.astype(x.dtype).reshape(B, S, H * dv)
-    return nmatmul(out, params["wo"], ncfg, path="wo").astype(x.dtype), new_cache
+    with layer_scope("wo"):
+        return nmatmul(out, params["wo"]).astype(x.dtype), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -426,13 +434,17 @@ def cross_attn_init(key, cfg):
     }
 
 
-def cross_attn_apply(params, x, enc_out, cfg, ncfg):
+def cross_attn_apply(params, x, enc_out, cfg):
     B, S, d = x.shape
     Se = enc_out.shape[1]
     H, hd = cfg.n_heads, cfg.resolved_head_dim
-    q = nmatmul(x, params["wq"], ncfg, path="wq").reshape(B, S, H, hd)
-    k = nmatmul(enc_out, params["wk"], ncfg, path="wk").reshape(B, Se, H, hd)
-    v = nmatmul(enc_out, params["wv"], ncfg, path="wv").reshape(B, Se, H, hd)
+    with layer_scope("wq"):
+        q = nmatmul(x, params["wq"]).reshape(B, S, H, hd)
+    with layer_scope("wk"):
+        k = nmatmul(enc_out, params["wk"]).reshape(B, Se, H, hd)
+    with layer_scope("wv"):
+        v = nmatmul(enc_out, params["wv"]).reshape(B, Se, H, hd)
     out = blockwise_attention(q, k, v, causal=False)
     out = out.astype(x.dtype).reshape(B, S, H * hd)
-    return nmatmul(out, params["wo"], ncfg, path="wo").astype(x.dtype)
+    with layer_scope("wo"):
+        return nmatmul(out, params["wo"]).astype(x.dtype)

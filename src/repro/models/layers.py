@@ -14,8 +14,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.numerics import NumericsConfig, nmatmul
-from repro.core.policy import Numerics
+from repro.numerics import (Numerics, layer_scope, maybe_numerics_scope,
+                            nmatmul)
 
 
 class PP:
@@ -101,9 +101,18 @@ def embed_lookup(table, tokens):
     return jnp.take(table, tokens, axis=0)
 
 
-def unembed(x, table, ncfg: NumericsConfig, transpose=True):
+def unembed(x, table, ncfg: Numerics | None = None, transpose=True,
+            name: str = "lm_head"):
+    """Unembedding matmul under the ambient numerics scope.
+
+    Resolves under the ``lm_head`` layer path (override via ``name``), so
+    the site participates in per-layer policies and the sensitivity tap
+    like every other projection; ``ncfg`` optionally establishes the scope
+    for this call.
+    """
     w = table.T if transpose else table
-    return nmatmul(x, w, ncfg)
+    with maybe_numerics_scope(ncfg), layer_scope(name):
+        return nmatmul(x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -158,18 +167,23 @@ def mlp_init(key, d, ff):
     }
 
 
-def mlp_apply(params, x, ncfg: Numerics):
-    """Gated MLP; ``ncfg`` may be a config or a policy scoped to this MLP
-    (relative paths ``wi``/``wg``/``wo``)."""
+def mlp_apply(params, x, ncfg: Numerics | None = None):
+    """Gated MLP under the ambient numerics scope (relative call-site
+    paths ``wi``/``wg``/``wo``); ``ncfg`` optionally establishes the scope
+    for this call (a config, or a policy resolved from here down)."""
     from repro.distributed.sharding import logical_constraint
 
     hidden_axes = ("batch",) + (None,) * (x.ndim - 2) + ("mlp",)
-    h = nmatmul(x, params["wi"], ncfg, path="wi")
-    g = nmatmul(x, params["wg"], ncfg, path="wg")
-    h = logical_constraint(h, hidden_axes)
-    g = logical_constraint(g, hidden_axes)
-    h = h * jax.nn.silu(g)
-    return nmatmul(h.astype(x.dtype), params["wo"], ncfg, path="wo")
+    with maybe_numerics_scope(ncfg):
+        with layer_scope("wi"):
+            h = nmatmul(x, params["wi"])
+        with layer_scope("wg"):
+            g = nmatmul(x, params["wg"])
+        h = logical_constraint(h, hidden_axes)
+        g = logical_constraint(g, hidden_axes)
+        h = h * jax.nn.silu(g)
+        with layer_scope("wo"):
+            return nmatmul(h.astype(x.dtype), params["wo"])
 
 
 def softcap(x, cap):

@@ -25,8 +25,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.numerics import nmatmul, operand_tap_active
-from repro.core.policy import Numerics, resolve, scoped
+from repro.numerics import (Numerics, ambient_view, layer_scope,
+                            maybe_numerics_scope, nmatmul, numerics_scope,
+                            operand_tap_active, resolve)
 from repro.distributed.sharding import (current_mesh_rules, logical_constraint,
                                         spec_for)
 
@@ -49,12 +50,13 @@ def moe_init(key, cfg):
     return p
 
 
-def routed_expert_configs(ncfg: Numerics, n_experts: int) -> dict:
+def routed_expert_configs(ncfg: Numerics | None, n_experts: int) -> dict:
     """Resolved config per (projection, expert) under ``expert{k}.{name}``.
 
     ``ncfg`` is the block's ``mlp``-scoped policy view (or a plain config,
-    which resolves identically for every expert).  Returns
-    ``{name: (cfg_expert0, ..., cfg_expertE-1)}`` for wi/wg/wo.
+    which resolves identically for every expert); pass
+    ``repro.numerics.ambient_view()`` to resolve from the ambient scope.
+    Returns ``{name: (cfg_expert0, ..., cfg_expertE-1)}`` for wi/wg/wo.
     """
     return {name: tuple(resolve(ncfg, f"expert{k}.{name}")
                         for k in range(n_experts))
@@ -65,35 +67,36 @@ def _all_exact(cfgs: dict) -> bool:
     return all(c.mode == "exact" for tup in cfgs.values() for c in tup)
 
 
-def _experts_matmul(buf, w, ncfg, name, out_dtype):
+def _experts_matmul(buf, w, name, out_dtype):
     """Per-expert numerics matmul: ``buf (B, E, C, D) @ w (E, D, F)``.
 
-    Each expert's slab goes through :func:`nmatmul` under its own resolved
-    path (``expert{k}.{name}``), so distinct experts can run distinct
-    multipliers in one forward.  Used only when some expert resolves
-    non-exact (or the calibration tap is recording) — the all-exact fast
-    path keeps the fused einsum.
+    Each expert's slab goes through :func:`nmatmul` under its own
+    ``layer_scope`` segment (``expert{k}.{name}``), so distinct experts can
+    run distinct multipliers in one forward.  Used only when some expert
+    resolves non-exact (or the calibration tap is recording) — the
+    all-exact fast path keeps the fused einsum.
     """
     B, E, C, D = buf.shape
     outs = []
     for k in range(E):
-        ye = nmatmul(buf[:, k].reshape(B * C, D), w[k], ncfg,
-                     path=f"expert{k}.{name}")
+        with layer_scope(f"expert{k}.{name}"):
+            ye = nmatmul(buf[:, k].reshape(B * C, D), w[k])
         outs.append(ye.reshape(B, C, -1).astype(out_dtype))
     return jnp.stack(outs, axis=1)
 
 
-def moe_apply(params, x, cfg, ncfg: Numerics):
+def moe_apply(params, x, cfg, ncfg: Numerics | None = None):
     """x: (B, S, D) -> (B, S, D).
 
-    ``ncfg`` may be a policy view scoped to this block's ``mlp`` prefix;
-    the shared (always-on) expert resolves under the relative ``shared.*``
-    paths and the routed experts under ``expert{k}.{wi,wg,wo}``.  The
-    router always runs exact fp32 (routing is control logic).  When every
-    expert resolves to an exact config the routed slab multiply keeps the
-    fused all-expert einsum in ``x.dtype`` — bit-for-bit the pre-policy
-    datapath; any non-exact expert switches the layer to per-expert
-    :func:`nmatmul` calls.
+    Numerics come from the ambient scope (the caller establishes this
+    block's ``mlp`` prefix); the shared (always-on) expert resolves under
+    the relative ``shared.*`` paths and the routed experts under
+    ``expert{k}.{wi,wg,wo}``.  ``ncfg`` optionally establishes the scope
+    for this call.  The router always runs exact fp32 (routing is control
+    logic).  When every expert resolves to an exact config the routed slab
+    multiply keeps the fused all-expert einsum in ``x.dtype`` — bit-for-bit
+    the pre-policy datapath; any non-exact expert switches the layer to
+    per-expert :func:`nmatmul` calls.
 
     Two implementations:
     * **shard_map EP** (used whenever a mesh context with a 'model' axis
@@ -108,16 +111,18 @@ def moe_apply(params, x, cfg, ncfg: Numerics):
       row sorts its own S*K assignments; only int32 slot indices are
       scattered, big-D movement is gathers.
     """
-    state = current_mesh_rules()
-    if state is not None:
-        mesh, rules = state
-        w_spec = spec_for(("experts", None, None), params["wi"].shape, mesh, rules)
-        if w_spec[0] is not None:  # experts axis actually sharded
-            return _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules)
-    return _moe_apply_gspmd(params, x, cfg, ncfg)
+    with maybe_numerics_scope(ncfg):
+        state = current_mesh_rules()
+        if state is not None:
+            mesh, rules = state
+            w_spec = spec_for(("experts", None, None), params["wi"].shape,
+                              mesh, rules)
+            if w_spec[0] is not None:  # experts axis actually sharded
+                return _moe_apply_shardmap(params, x, cfg, mesh, rules)
+        return _moe_apply_gspmd(params, x, cfg)
 
 
-def _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules):
+def _moe_apply_shardmap(params, x, cfg, mesh, rules):
     e = cfg.moe
     E, K = e.n_experts, e.top_k
     B, S, D = x.shape
@@ -127,9 +132,9 @@ def _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules):
     # non-exact configs run per-local-expert nmatmul inside the body;
     # heterogeneous policies fall back to the group-local GSPMD path (which
     # slices experts at trace time and lets GSPMD partition the result).
-    cfgs = routed_expert_configs(ncfg, E)
+    cfgs = routed_expert_configs(ambient_view(), E)
     if any(len(set(tup)) > 1 for tup in cfgs.values()):
-        return _moe_apply_gspmd(params, x, cfg, ncfg)
+        return _moe_apply_gspmd(params, x, cfg)
     ucfg = {name: tup[0] for name, tup in cfgs.items()}
     exact_experts = _all_exact(cfgs)
 
@@ -187,9 +192,14 @@ def _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules):
             h = h * jax.nn.silu(g)
             out = jnp.einsum("ecf,efd->ecd", h, wo.astype(xl.dtype))
         else:
-            local = lambda b, w_, c_: jnp.stack(
-                [nmatmul(b[i], w_[i], c_) for i in range(b.shape[0])]
-            ).astype(xl.dtype)
+            # uniform resolved config: a nested numerics_scope locally
+            # overrides the outer policy (the body cannot branch per shard)
+            def local(b, w_, c_):
+                with numerics_scope(c_):
+                    return jnp.stack(
+                        [nmatmul(b[i], w_[i]) for i in range(b.shape[0])]
+                    ).astype(xl.dtype)
+
             h = local(buf, wi, ucfg["wi"])
             g = local(buf, wg, ucfg["wg"])
             h = h * jax.nn.silu(g)
@@ -213,13 +223,13 @@ def _moe_apply_shardmap(params, x, cfg, ncfg, mesh, rules):
     )(x, params["router"], params["wi"], params["wg"], params["wo"])
 
     if "shared" in params:
-        y = y + mlp_apply(params["shared"], x.reshape(-1, D),
-                          scoped(ncfg, "shared")).astype(
-            x.dtype).reshape(B, S, D)
+        with layer_scope("shared"):
+            y = y + mlp_apply(params["shared"], x.reshape(-1, D)).astype(
+                x.dtype).reshape(B, S, D)
     return y
 
 
-def _moe_apply_gspmd(params, x, cfg, ncfg: Numerics):
+def _moe_apply_gspmd(params, x, cfg):
     B, S, D = x.shape
     e = cfg.moe
     E, K = e.n_experts, e.top_k
@@ -268,17 +278,17 @@ def _moe_apply_gspmd(params, x, cfg, ncfg: Numerics):
     # All-exact experts keep the fused einsum (bit-for-bit the pre-policy
     # datapath); any non-exact expert — or an active calibration tap, which
     # needs per-expert operand records — switches to per-expert nmatmul.
-    cfgs = routed_expert_configs(ncfg, E)
+    cfgs = routed_expert_configs(ambient_view(), E)
     if _all_exact(cfgs) and not operand_tap_active():
         h = jnp.einsum("becd,edf->becf", buf, params["wi"].astype(x.dtype))
         g = jnp.einsum("becd,edf->becf", buf, params["wg"].astype(x.dtype))
         h = h * jax.nn.silu(g)
         out_buf = jnp.einsum("becf,efd->becd", h, params["wo"].astype(x.dtype))
     else:
-        h = _experts_matmul(buf, params["wi"], ncfg, "wi", x.dtype)
-        g = _experts_matmul(buf, params["wg"], ncfg, "wg", x.dtype)
+        h = _experts_matmul(buf, params["wi"], "wi", x.dtype)
+        g = _experts_matmul(buf, params["wg"], "wg", x.dtype)
         h = h * jax.nn.silu(g)
-        out_buf = _experts_matmul(h, params["wo"], ncfg, "wo", x.dtype)
+        out_buf = _experts_matmul(h, params["wo"], "wo", x.dtype)
     out_buf = logical_constraint(out_buf, ("batch", "experts", None, None))
 
     def combine_group(ob, invg, gg):
@@ -292,9 +302,9 @@ def _moe_apply_gspmd(params, x, cfg, ncfg: Numerics):
     y = jax.vmap(combine_group)(out_buf, inv, gate)      # (B, S, D)
 
     if "shared" in params:
-        y = y + mlp_apply(params["shared"], x.reshape(-1, D),
-                          scoped(ncfg, "shared")).astype(
-            x.dtype).reshape(B, S, D)
+        with layer_scope("shared"):
+            y = y + mlp_apply(params["shared"], x.reshape(-1, D)).astype(
+                x.dtype).reshape(B, S, D)
     return y
 
 

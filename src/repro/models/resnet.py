@@ -22,8 +22,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.numerics import NumericsConfig, nmatmul, operand_tap_active
-from repro.core.policy import Numerics, is_policy, resolve
+from repro.numerics import (Numerics, NumericsConfig, current_numerics,
+                            layer_scope, maybe_numerics_scope, nmatmul,
+                            numerics_scope, operand_tap_active, resolve_here)
 
 from .layers import PP, normal
 
@@ -68,43 +69,49 @@ def bn_state_init(c):
     return {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
 
 
-def conv2d(x, w, stride=1, numerics: Numerics | None = None, path: str = ""):
+def conv2d(x, w, stride=1, numerics: Numerics | None = None):
     """NHWC conv; approximate numerics use im2col + the numerics matmul.
 
-    Exact convs run the native lowering — except while a sensitivity
-    calibration tap is installed (``repro.core.numerics.operand_tap_active``),
-    when they too route through im2col + ``nmatmul`` so the instrumented
-    pass records this site's operand distribution under ``path``.
+    The config resolves from the ambient scope at the current layer path
+    (``numerics`` optionally establishes the scope for this call); with no
+    ambient scope at all the native lowering runs unconditionally.  Exact
+    convs run the native lowering too — except while a sensitivity
+    calibration tap is installed (``repro.numerics.operand_tap_active``),
+    when they route through im2col + ``nmatmul`` so the instrumented pass
+    records this site's operand distribution under its full path.
     """
-    resolved = resolve(numerics, path) if numerics is not None else None
-    if resolved is None or (resolved.mode == "exact"
-                            and not operand_tap_active()):
-        return jax.lax.conv_general_dilated(
-            x, w, (stride, stride), "SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        )
-    numerics = resolved if not is_policy(numerics) else numerics
-    kh, kw, cin, cout = w.shape
-    B, H, W, _ = x.shape
-    Ho, Wo = -(-H // stride), -(-W // stride)
-    # im2col with XLA-compatible SAME padding (asymmetric under stride)
-    th = max((Ho - 1) * stride + kh - H, 0)
-    tw = max((Wo - 1) * stride + kw - W, 0)
-    ph_lo, pw_lo = th // 2, tw // 2
-    xp = jnp.pad(x, ((0, 0), (ph_lo, th - ph_lo), (pw_lo, tw - pw_lo), (0, 0)))
-    patches = []
-    for i in range(kh):
-        for j in range(kw):
-            patches.append(
-                xp[:, i:i + (Ho - 1) * stride + 1:stride,
-                   j:j + (Wo - 1) * stride + 1:stride, :])
-    cols = jnp.concatenate(patches, axis=-1).reshape(B * Ho * Wo, kh * kw * cin)
-    wmat = w.reshape(kh * kw * cin, cout)
-    # one audited entry point for emulated AND segmented approximate convs;
-    # the policy (when given) re-resolves inside nmatmul so the calibration
-    # tap records this site under its full path
-    out = nmatmul(cols, wmat, numerics, path=path)
-    return out.reshape(B, Ho, Wo, cout)
+    with maybe_numerics_scope(numerics):
+        resolved = (resolve_here() if current_numerics() is not None
+                    else None)
+        if resolved is None or (resolved.mode == "exact"
+                                and not operand_tap_active()):
+            return jax.lax.conv_general_dilated(
+                x, w, (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        kh, kw, cin, cout = w.shape
+        B, H, W, _ = x.shape
+        Ho, Wo = -(-H // stride), -(-W // stride)
+        # im2col with XLA-compatible SAME padding (asymmetric under stride)
+        th = max((Ho - 1) * stride + kh - H, 0)
+        tw = max((Wo - 1) * stride + kw - W, 0)
+        ph_lo, pw_lo = th // 2, tw // 2
+        xp = jnp.pad(x, ((0, 0), (ph_lo, th - ph_lo), (pw_lo, tw - pw_lo),
+                         (0, 0)))
+        patches = []
+        for i in range(kh):
+            for j in range(kw):
+                patches.append(
+                    xp[:, i:i + (Ho - 1) * stride + 1:stride,
+                       j:j + (Wo - 1) * stride + 1:stride, :])
+        cols = jnp.concatenate(patches, axis=-1).reshape(B * Ho * Wo,
+                                                         kh * kw * cin)
+        wmat = w.reshape(kh * kw * cin, cout)
+        # one audited entry point for emulated AND segmented approximate
+        # convs; nmatmul re-resolves at the ambient path so the calibration
+        # tap records this site under its full path
+        out = nmatmul(cols, wmat)
+        return out.reshape(B, Ho, Wo, cout)
 
 
 def batchnorm(params, state, x, train: bool, momentum=0.9, eps=1e-5):
@@ -157,16 +164,18 @@ def init(cfg: ResNetConfig, key):
     return params, state
 
 
-def _block_apply(p, s, x, stride, cfg, train, path=""):
-    num = cfg.numerics
-    h, s1 = batchnorm(p["bn1"], s["bn1"],
-                      conv2d(x, p["conv1"], stride, num, f"{path}.conv1"), train)
+def _block_apply(p, s, x, stride, cfg, train):
+    with layer_scope("conv1"):
+        c1 = conv2d(x, p["conv1"], stride)
+    h, s1 = batchnorm(p["bn1"], s["bn1"], c1, train)
     h = jax.nn.relu(h)
-    h, s2 = batchnorm(p["bn2"], s["bn2"],
-                      conv2d(h, p["conv2"], 1, num, f"{path}.conv2"), train)
+    with layer_scope("conv2"):
+        c2 = conv2d(h, p["conv2"], 1)
+    h, s2 = batchnorm(p["bn2"], s["bn2"], c2, train)
     if "proj" in p:
-        x, s3 = batchnorm(p["bn_proj"], s["bn_proj"],
-                          conv2d(x, p["proj"], stride, num, f"{path}.proj"), train)
+        with layer_scope("proj"):
+            cp = conv2d(x, p["proj"], stride)
+        x, s3 = batchnorm(p["bn_proj"], s["bn_proj"], cp, train)
         new_s = {"bn1": s1, "bn2": s2, "bn_proj": s3}
     else:
         new_s = {"bn1": s1, "bn2": s2}
@@ -174,22 +183,30 @@ def _block_apply(p, s, x, stride, cfg, train, path=""):
 
 
 def apply(params, state, x, cfg: ResNetConfig, train: bool = False):
-    """x: (B, 32, 32, 3) -> logits (B, classes); returns (logits, new_state)."""
-    new_state = {}
-    h, new_state["bn_stem"] = batchnorm(
-        params["bn_stem"], state["bn_stem"],
-        conv2d(x, params["stem"], 1, cfg.numerics, "stem"), train)
-    h = jax.nn.relu(h)
-    for si, (w, n) in enumerate(zip(cfg.widths, cfg.blocks)):
-        for bi in range(n):
-            stride = 2 if (si > 0 and bi == 0) else 1
-            h, s = _block_apply(params[f"s{si}b{bi}"], state[f"s{si}b{bi}"],
-                                h, stride, cfg, train, path=f"s{si}b{bi}")
-            new_state[f"s{si}b{bi}"] = s
-    h = h.mean(axis=(1, 2))
-    # final classifier also goes through the configured multiplier
-    logits = nmatmul(h, params["fc"], cfg.numerics, path="fc")
-    return logits + params["fc_b"], new_state
+    """x: (B, 32, 32, 3) -> logits (B, classes); returns (logits, new_state).
+
+    Establishes the numerics scope from ``cfg.numerics``; every conv/fc
+    resolves ambiently under its layer path (see :func:`layer_paths`)."""
+    with numerics_scope(cfg.numerics):
+        new_state = {}
+        with layer_scope("stem"):
+            cs = conv2d(x, params["stem"], 1)
+        h, new_state["bn_stem"] = batchnorm(
+            params["bn_stem"], state["bn_stem"], cs, train)
+        h = jax.nn.relu(h)
+        for si, (w, n) in enumerate(zip(cfg.widths, cfg.blocks)):
+            for bi in range(n):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                with layer_scope(f"s{si}b{bi}"):
+                    h, s = _block_apply(params[f"s{si}b{bi}"],
+                                        state[f"s{si}b{bi}"], h, stride,
+                                        cfg, train)
+                new_state[f"s{si}b{bi}"] = s
+        h = h.mean(axis=(1, 2))
+        # final classifier also goes through the configured multiplier
+        with layer_scope("fc"):
+            logits = nmatmul(h, params["fc"])
+        return logits + params["fc_b"], new_state
 
 
 def loss_fn(params, state, batch, cfg: ResNetConfig):

@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.numerics import NumericsConfig, nmatmul
-from repro.core.policy import Numerics, resolve
+from repro.numerics import (Numerics, layer_scope, maybe_numerics_scope,
+                            nmatmul, resolve_here)
 from repro.distributed.sharding import logical_constraint
 from repro.kernels import ops
 
@@ -74,23 +74,32 @@ def _causal_conv(xs, w, b, state=None):
     return jax.nn.silu(out), new_state
 
 
-def ssm_apply(params, x, cfg, ncfg: Numerics, cache=None, want_state=False):
+def ssm_apply(params, x, cfg, ncfg: Numerics | None = None, cache=None,
+              want_state=False):
     """x: (B, S, D).  cache = dict(conv (B,W-1,Din), state (B,H,N,P)).
 
     want_state=True (prefill): additionally returns the final SSM/conv state,
     computed in closed form (one weighted einsum over the sequence).
 
-    ``ncfg`` may be a policy view scoped to this block's ``ssm`` prefix;
-    relative paths are ``in_proj``/``out_proj`` (projection matmuls) and
-    ``scan`` (backend selection only — the selective scan is not a
-    multiplier datapath, but its kernel backend is still per-layer).
+    Numerics come from the ambient scope (the caller establishes this
+    block's ``ssm`` prefix); relative call-site paths are
+    ``in_proj``/``out_proj`` (projection matmuls) and ``scan`` (backend
+    selection only — the selective scan is not a multiplier datapath, but
+    its kernel backend is still per-layer).  ``ncfg`` optionally
+    establishes the scope for this call.
     """
+    with maybe_numerics_scope(ncfg):
+        return _ssm_apply(params, x, cfg, cache=cache, want_state=want_state)
+
+
+def _ssm_apply(params, x, cfg, cache=None, want_state=False):
     s = cfg.ssm
     B_, S, D = x.shape
     d_inner, H = ssm_dims(cfg)
     N, P = s.state_size, s.head_dim
 
-    proj = nmatmul(x, params["in_proj"], ncfg, path="in_proj").astype(x.dtype)
+    with layer_scope("in_proj"):
+        proj = nmatmul(x, params["in_proj"]).astype(x.dtype)
     proj = logical_constraint(proj, ("batch", None, "ssm_inner"))
     z, xs, Bm, Cm, dt = _split_proj(proj, cfg)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
@@ -100,7 +109,7 @@ def ssm_apply(params, x, cfg, ncfg: Numerics, cache=None, want_state=False):
         xs_raw = xs
         xs, conv_tail = _causal_conv(xs, params["conv_w"], params["conv_b"])
         xh = xs.reshape(B_, S, H, P)
-        scan_backend = resolve(ncfg, "scan").backend
+        scan_backend = resolve_here("scan").backend
         y = jax.vmap(
             lambda xb, db, Bb, Cb: ops.ssd_scan(xb, db, A, Bb, Cb, chunk=s.chunk,
                                                 backend=scan_backend)
@@ -136,7 +145,8 @@ def ssm_apply(params, x, cfg, ncfg: Numerics, cache=None, want_state=False):
     y = y.reshape(B_, S, d_inner).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
-    return nmatmul(y, params["out_proj"], ncfg, path="out_proj").astype(x.dtype), new_cache
+    with layer_scope("out_proj"):
+        return nmatmul(y, params["out_proj"]).astype(x.dtype), new_cache
 
 
 def ssm_cache_init(cfg, batch, dtype=jnp.float32):

@@ -27,8 +27,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.numerics import nmatmul
-from repro.core.policy import expert_paths, is_policy, resolve, scoped
+from repro.numerics import (current_numerics, expert_paths, is_policy,
+                            layer_scope, maybe_numerics_scope, nmatmul,
+                            numerics_scope, resolve)
 from repro.distributed.sharding import logical_constraint
 
 from . import attention as attn
@@ -62,47 +63,60 @@ def block_init(key, cfg, spec):
     return p
 
 
-def block_apply(params, x, cfg, spec, positions, ncfg, mode, cache=None,
-                q_offset=0, causal=True, enc=None):
+def block_apply(params, x, cfg, spec, positions, ncfg=None, mode="train",
+                cache=None, q_offset=0, causal=True, enc=None):
     """Returns (x, new_cache_or_None).
 
-    ``ncfg`` is a NumericsConfig or a policy view already scoped to this
-    block (e.g. ``blocks.7``); submodules resolve under the relative
-    ``attn`` / ``cross`` / ``mlp`` / ``ssm`` prefixes (see
-    ``repro.core.policy`` for the full path table).
+    Numerics come from the ambient scope: the caller establishes this
+    block's ``blocks.{i}`` prefix (``stack_apply``) and submodules resolve
+    under the relative ``attn`` / ``cross`` / ``mlp`` / ``ssm`` segments
+    (see ``repro.core.policy`` for the full path table).  ``ncfg``
+    optionally establishes the scope for this call (a config, or a policy
+    resolved from this block down).
     """
+    with maybe_numerics_scope(ncfg):
+        return _block_apply(params, x, cfg, spec, positions, mode,
+                            cache=cache, q_offset=q_offset, causal=causal,
+                            enc=enc)
+
+
+def _block_apply(params, x, cfg, spec, positions, mode, cache=None,
+                 q_offset=0, causal=True, enc=None):
     if spec.kind == "ssm":
         h = rmsnorm(params["ln1"], x, cfg.norm_eps)
-        h, new_cache = ssm_mod.ssm_apply(
-            params["ssm"], h, cfg, scoped(ncfg, "ssm"), cache=cache,
-            want_state=(mode == "prefill"),
-        )
+        with layer_scope("ssm"):
+            h, new_cache = ssm_mod.ssm_apply(
+                params["ssm"], h, cfg, cache=cache,
+                want_state=(mode == "prefill"),
+            )
         x = logical_constraint(x + h, ("batch", "seq", None))
         return x, new_cache
 
     new_cache = None
     if "attn" in params:
         h = rmsnorm(params["ln1"], x, cfg.norm_eps)
-        a_ncfg = scoped(ncfg, "attn")
-        if spec.attn == "mla":
-            h, new_cache = attn.mla_apply(params["attn"], h, cfg, spec, positions,
-                                          a_ncfg, cache=cache, q_offset=q_offset)
-        else:
-            h, new_cache = attn.gqa_apply(params["attn"], h, cfg, spec, positions,
-                                          a_ncfg, cache=cache, q_offset=q_offset,
-                                          causal=causal)
+        with layer_scope("attn"):
+            if spec.attn == "mla":
+                h, new_cache = attn.mla_apply(params["attn"], h, cfg, spec,
+                                              positions, cache=cache,
+                                              q_offset=q_offset)
+            else:
+                h, new_cache = attn.gqa_apply(params["attn"], h, cfg, spec,
+                                              positions, cache=cache,
+                                              q_offset=q_offset, causal=causal)
         x = logical_constraint(x + h, ("batch", "seq", None))
         if mode == "train":
             new_cache = None
     if "cross" in params and enc is not None:
         h = rmsnorm(params["ln_cross"], x, cfg.norm_eps)
-        x = x + attn.cross_attn_apply(params["cross"], h, enc, cfg,
-                                      scoped(ncfg, "cross"))
+        with layer_scope("cross"):
+            x = x + attn.cross_attn_apply(params["cross"], h, enc, cfg)
     h = rmsnorm(params["ln2"], x, cfg.norm_eps)
-    if spec.kind == "moe":
-        h = moe_mod.moe_apply(params["mlp"], h, cfg, scoped(ncfg, "mlp"))
-    else:
-        h = mlp_apply(params["mlp"], h, scoped(ncfg, "mlp")).astype(x.dtype)
+    with layer_scope("mlp"):
+        if spec.kind == "moe":
+            h = moe_mod.moe_apply(params["mlp"], h, cfg)
+        else:
+            h = mlp_apply(params["mlp"], h).astype(x.dtype)
     x = logical_constraint(x + h, ("batch", "seq", None))
     return x, new_cache
 
@@ -286,17 +300,26 @@ def stack_params_init(cfg, key):
     return params
 
 
-def stack_apply(params, x, cfg, ncfg, positions, mode, caches=None,
-                q_offset=0, causal=True, enc=None):
+def stack_apply(params, x, cfg, ncfg=None, positions=None, mode="train",
+                caches=None, q_offset=0, causal=True, enc=None):
     """Run all segments.  Returns (x, new_caches list-of-dicts or None).
 
-    ``ncfg`` may be a NumericsConfig (one global setting, the pre-policy
-    behaviour) or a NumericsPolicy: block ``(r, pi)`` of segment ``si``
-    resolves under ``blocks.{global_layer_index}``.  Scanned segments whose
-    repeats resolve to different configs are transparently unrolled (each
-    repeat traces its own numerics); segments uniform under the policy keep
-    the compile-time-flat scan.
+    Numerics come from the ambient scope (a NumericsConfig — one global
+    setting — or a NumericsPolicy): block ``(r, pi)`` of segment ``si``
+    resolves under the ``blocks.{global_layer_index}`` layer scope.
+    Scanned segments whose repeats resolve to different configs are
+    transparently unrolled (each repeat traces its own numerics); segments
+    uniform under the policy keep the compile-time-flat scan.  ``ncfg``
+    optionally establishes the scope for this call.
     """
+    with maybe_numerics_scope(ncfg):
+        return _stack_apply(params, x, cfg, positions, mode, caches=caches,
+                            q_offset=q_offset, causal=causal, enc=enc)
+
+
+def _stack_apply(params, x, cfg, positions, mode, caches=None,
+                 q_offset=0, causal=True, enc=None):
+    ncfg = current_numerics()
     collect = mode != "train"
     new_caches = []
     layer_offset = 0
@@ -314,10 +337,10 @@ def stack_apply(params, x, cfg, ncfg, positions, mode, caches=None,
             for pi, spec in enumerate(_pattern):
                 p = _shared[pi] if spec.shared else layer_params[pi]
                 c = layer_caches.get(pi)
-                x, nc = block_apply(p, x, cfg, spec, positions,
-                                    scoped(ncfg, f"blocks.{base + pi}"), mode,
-                                    cache=c, q_offset=q_offset, causal=causal,
-                                    enc=enc)
+                with layer_scope(f"blocks.{base + pi}"):
+                    x, nc = _block_apply(p, x, cfg, spec, positions, mode,
+                                         cache=c, q_offset=q_offset,
+                                         causal=causal, enc=enc)
                 if nc is not None and collect:
                     out_caches[pi] = nc
             return x, out_caches
@@ -403,17 +426,20 @@ def _embed_inputs(params, cfg, batch):
 
 
 def backbone(params, cfg, batch, mode, caches=None, q_offset=0, enc=None):
-    """Embeds -> (encoder) -> decoder stack -> final norm."""
-    ncfg = cfg.numerics
-    x = _embed_inputs(params, cfg, batch)
-    B, S = x.shape[:2]
-    positions = _positions_for(cfg, batch, B, S, offset=q_offset)
-    if cfg.encoder_layers and enc is None:
-        enc = encoder_apply(params["encoder"], cfg, batch, ncfg)
-    x, new_caches = stack_apply(params, x, cfg, ncfg, positions, mode,
-                                caches=caches, q_offset=q_offset, enc=enc)
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return x, new_caches, enc
+    """Embeds -> (encoder) -> decoder stack -> final norm.
+
+    Establishes the numerics scope from ``cfg.numerics`` — everything
+    below resolves ambiently (``repro.numerics``)."""
+    with numerics_scope(cfg.numerics):
+        x = _embed_inputs(params, cfg, batch)
+        B, S = x.shape[:2]
+        positions = _positions_for(cfg, batch, B, S, offset=q_offset)
+        if cfg.encoder_layers and enc is None:
+            enc = encoder_apply(params["encoder"], cfg, batch)
+        x, new_caches = _stack_apply(params, x, cfg, positions, mode,
+                                     caches=caches, q_offset=q_offset, enc=enc)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, new_caches, enc
 
 
 def logits_fn(params, cfg, hidden):
@@ -421,7 +447,8 @@ def logits_fn(params, cfg, hidden):
     if is_policy(cfg.numerics):
         # the unembedding participates in per-layer policies as ``lm_head``
         # (a policy default of exact/bf16 reproduces the legacy head)
-        logits = nmatmul(hidden, w, cfg.numerics, path="lm_head")
+        with numerics_scope(cfg.numerics), layer_scope("lm_head"):
+            logits = nmatmul(hidden, w)
     else:
         logits = jax.lax.dot_general(
             hidden.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
@@ -521,20 +548,23 @@ def encoder_init(cfg, key):
     }
 
 
-def encoder_apply(params, cfg, batch, ncfg):
-    x = batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
-    x = logical_constraint(x, ("batch", "seq", None))
-    B, S = x.shape[:2]
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
-    spec = _enc_spec(cfg)
+def encoder_apply(params, cfg, batch, ncfg=None):
+    with maybe_numerics_scope(ncfg):
+        x = batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
+        x = logical_constraint(x, ("batch", "seq", None))
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        spec = _enc_spec(cfg)
 
-    def body(x, layer_params):
-        # encoder layers scan with one trace, so rules cannot distinguish
-        # them: all resolve under the unindexed ``encoder.blocks`` prefix
-        x, _ = block_apply(layer_params, x, cfg, spec, positions,
-                           scoped(ncfg, "encoder.blocks"),
-                           mode="train", causal=False)
-        return x, {}
+        def body(x, layer_params):
+            # encoder layers scan with one trace, so rules cannot
+            # distinguish them: all resolve under the unindexed
+            # ``encoder.blocks`` prefix
+            with layer_scope("encoder.blocks"):
+                x, _ = _block_apply(layer_params, x, cfg, spec, positions,
+                                    mode="train", causal=False)
+            return x, {}
 
-    x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
-    return rmsnorm(params["norm"], x, cfg.norm_eps)
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+        return rmsnorm(params["norm"], x, cfg.norm_eps)

@@ -1,0 +1,77 @@
+"""Public numerics API — context-scoped accuracy configuration.
+
+The paper's pitch is compiler-integrated accuracy configuration: the
+multiplier precision of a *region* of the program is ambient state, not
+an argument to every matmul.  This module is the one public surface for
+that:
+
+>>> from repro.numerics import NumericsConfig, numerics_scope, layer_scope, nmatmul
+>>> seg1 = NumericsConfig(mode="segmented", seg_passes=1, backend="xla")
+>>> with numerics_scope(seg1):
+...     y = nmatmul(x, w)                 # runs under the ambient config
+
+Per-layer policies resolve against the full path of the nested
+``layer_scope`` stack:
+
+>>> pol = NumericsPolicy((("blocks.*.mlp.*", seg1),))
+>>> with numerics_scope(pol), layer_scope("blocks.3"), layer_scope("mlp"):
+...     with layer_scope("wi"):
+...         h = nmatmul(x, w)             # resolves blocks.3.mlp.wi -> seg1
+
+Scopes are trace-time constructs — safe under ``jax.jit``, ``lax.scan``
+and ``vmap``, but NOT part of a jit cache key: a function jitted under
+one scope and re-invoked under another replays the first trace's
+numerics (jit per scope, or close the jitted function over the config —
+see ``repro.core.scope``).  The model zoo establishes scopes internally
+from ``cfg.numerics``; end users normally go through
+:class:`repro.session.Session` and never touch a matmul.
+
+The legacy explicit form ``nmatmul(x, w, cfg, path=...)`` keeps working
+for one release behind a DeprecationWarning.
+"""
+from __future__ import annotations
+
+from repro.core.numerics import (BACKENDS, EXACT, NumericsConfig,
+                                 apply_elementwise, nmatmul,
+                                 operand_tap_active, segmented_matmul_xla,
+                                 set_operand_tap)
+from repro.core.numerics import _DEPRECATED_SITES as _DEPRECATED_SITES
+from repro.core.policy import (Numerics, NumericsPolicy, PolicyRule,
+                               ScopedPolicy, expert_paths, is_policy, resolve,
+                               scoped)
+from repro.core.scope import (ambient_view, current_numerics, current_path,
+                              layer_scope, maybe_numerics_scope,
+                              numerics_scope, resolve_here)
+
+__all__ = [
+    "BACKENDS",
+    "EXACT",
+    "Numerics",
+    "NumericsConfig",
+    "NumericsPolicy",
+    "PolicyRule",
+    "ScopedPolicy",
+    "ambient_view",
+    "apply_elementwise",
+    "current_numerics",
+    "current_path",
+    "expert_paths",
+    "is_policy",
+    "layer_scope",
+    "maybe_numerics_scope",
+    "nmatmul",
+    "numerics_scope",
+    "operand_tap_active",
+    "reset_deprecation_registry",
+    "resolve",
+    "resolve_here",
+    "scoped",
+    "segmented_matmul_xla",
+    "set_operand_tap",
+]
+
+
+def reset_deprecation_registry() -> None:
+    """Forget which call sites already emitted the nmatmul deprecation
+    warning (each site warns once per process; tests use this)."""
+    _DEPRECATED_SITES.clear()

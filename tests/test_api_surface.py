@@ -1,0 +1,45 @@
+"""Public API surface: ``repro.numerics`` / ``repro.session`` exports and
+signatures are pinned by ``tests/golden/api_surface.json`` — undeclared
+drift fails here (and in CI via ``tools/check_api.py``).  Intentional
+changes regenerate the snapshot:
+
+    PYTHONPATH=src python tools/check_api.py --write
+"""
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _check_api():
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import check_api
+    finally:
+        sys.path.pop(0)
+    return check_api
+
+
+def test_api_surface_matches_golden():
+    check_api = _check_api()
+    with open(check_api.GOLDEN) as f:
+        golden = json.load(f)
+    current = check_api.snapshot()
+    assert current == golden, (
+        "public API drift in repro.numerics / repro.session — if "
+        "intentional, run: PYTHONPATH=src python tools/check_api.py --write")
+
+
+def test_api_surface_covers_the_scope_and_session_entry_points():
+    """Guard against the snapshot rotting into an empty file: the names the
+    redesign is built on must be present."""
+    check_api = _check_api()
+    current = check_api.snapshot()
+    for name in ("numerics_scope", "layer_scope", "nmatmul",
+                 "NumericsPolicy", "current_path"):
+        assert name in current["repro.numerics"], name
+    assert "Session" in current["repro.session"]
+    methods = current["repro.session"]["Session"]["methods"]
+    for m in ("generate", "dryrun", "auto_configure", "ppa_report"):
+        assert m in methods, m

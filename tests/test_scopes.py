@@ -1,0 +1,322 @@
+"""Context-scoped numerics API: scope/path resolution, equivalence with the
+deprecated kwarg form under jit/scan/vmap, the once-per-site deprecation
+warning, and the model-zoo full-path regression (every call site resolves
+a non-empty full path)."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import numerics as rn
+from repro.configs import get_arch
+from repro.core import sensitivity
+from repro.models import resnet, transformer
+from repro.models.layers import unzip
+
+SEG1 = rn.NumericsConfig(mode="segmented", seg_passes=1, backend="xla")
+SEG3 = rn.NumericsConfig(mode="segmented", seg_passes=3, backend="xla")
+EXACT_F32 = rn.NumericsConfig(mode="exact", compute_dtype="float32")
+
+
+def _xw(rng, m=8, k=32, n=8):
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    return x, w
+
+
+def _kwarg_nmatmul(x, w, cfg, path):
+    """The deprecated explicit form, with its warning silenced."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return rn.nmatmul(x, w, cfg, path=path)
+
+
+# ---------------------------------------------------------------------------
+# scope stack semantics
+# ---------------------------------------------------------------------------
+
+def test_current_path_and_numerics_nesting():
+    assert rn.current_numerics() is None and rn.current_path() == ""
+    with rn.numerics_scope(SEG1):
+        assert rn.current_numerics() == SEG1
+        with rn.numerics_scope(SEG3):       # innermost wins
+            assert rn.current_numerics() == SEG3
+        assert rn.current_numerics() == SEG1
+        with rn.layer_scope("blocks.3"), rn.layer_scope("mlp"):
+            assert rn.current_path() == "blocks.3.mlp"
+            assert rn.current_path("wi") == "blocks.3.mlp.wi"
+    assert rn.current_numerics() is None and rn.current_path() == ""
+
+
+def test_scopes_unwind_on_exception():
+    with pytest.raises(RuntimeError):
+        with rn.numerics_scope(SEG1), rn.layer_scope("a"):
+            raise RuntimeError("boom")
+    assert rn.current_numerics() is None and rn.current_path() == ""
+
+
+def test_resolve_here_and_ambient_view():
+    pol = rn.NumericsPolicy(((("blocks.*.mlp.*"), SEG1),), default=EXACT_F32)
+    assert rn.resolve_here() == rn.EXACT          # no ambient scope
+    assert rn.ambient_view() is None
+    with rn.numerics_scope(pol), rn.layer_scope("blocks.0"), \
+            rn.layer_scope("mlp"):
+        assert rn.resolve_here("wi") == SEG1
+        assert rn.resolve_here() == EXACT_F32     # no-leaf path: default
+        view = rn.ambient_view()
+        assert view.lookup("wi") == SEG1          # relative lookups work
+        assert view.full_path("wi") == "blocks.0.mlp.wi"
+
+
+def test_scope_resolution_matches_kwarg_api_bitwise(rng):
+    x, w = _xw(rng)
+    pol = rn.NumericsPolicy((("blocks.*.mlp.*", SEG1),), default=EXACT_F32)
+    ref = _kwarg_nmatmul(x, w, pol, "blocks.3.mlp.wi")
+    with rn.numerics_scope(pol), rn.layer_scope("blocks.3"), \
+            rn.layer_scope("mlp"), rn.layer_scope("wi"):
+        got = rn.nmatmul(x, w)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    # scoped-policy shim view == nested layer_scope
+    ref2 = _kwarg_nmatmul(x, w, pol.scope("blocks.3").scope("mlp"), "wo")
+    with rn.numerics_scope(pol), rn.layer_scope("blocks.3.mlp.wo"):
+        got2 = rn.nmatmul(x, w)
+    np.testing.assert_array_equal(np.asarray(ref2), np.asarray(got2))
+
+
+# ---------------------------------------------------------------------------
+# transform safety: jit / scan / vmap resolve at trace time
+# ---------------------------------------------------------------------------
+
+def test_scope_inside_jit_matches_kwarg_api(rng):
+    x, w = _xw(rng)
+    pol = rn.NumericsPolicy((("approx.*", SEG1),), default=EXACT_F32)
+
+    def scoped_fn(a, b):
+        with rn.numerics_scope(pol), rn.layer_scope("approx"), \
+                rn.layer_scope("wi"):
+            return rn.nmatmul(a, b)
+
+    def kwarg_fn(a, b):
+        return _kwarg_nmatmul(a, b, pol, "approx.wi")
+
+    got = jax.jit(scoped_fn)(x, w)
+    ref = jax.jit(kwarg_fn)(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # and the approximate path really ran (distinct from exact)
+    assert not np.allclose(np.asarray(got), np.asarray(x) @ np.asarray(w))
+
+
+def test_scope_inside_scan_matches_kwarg_api(rng):
+    x, _ = _xw(rng, m=4, k=16, n=16)
+    ws = jnp.asarray(rng.standard_normal((3, 16, 16)) * 0.3, jnp.float32)
+    pol = rn.NumericsPolicy((("stack.*", SEG1),), default=EXACT_F32)
+
+    def scoped_scan(x0):
+        def body(h, wk):
+            with rn.numerics_scope(pol), rn.layer_scope("stack"), \
+                    rn.layer_scope("w"):
+                return rn.nmatmul(h, wk), None
+        out, _ = jax.lax.scan(body, x0, ws)
+        return out
+
+    def kwarg_scan(x0):
+        def body(h, wk):
+            return _kwarg_nmatmul(h, wk, pol, "stack.w"), None
+        out, _ = jax.lax.scan(body, x0, ws)
+        return out
+
+    np.testing.assert_array_equal(np.asarray(jax.jit(scoped_scan)(x)),
+                                  np.asarray(jax.jit(kwarg_scan)(x)))
+
+
+def test_scope_inside_vmap_matches_kwarg_api(rng):
+    xs = jnp.asarray(rng.standard_normal((5, 8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    pol = rn.NumericsPolicy((("v.*", SEG1),))
+
+    def scoped_fn(a):
+        with rn.numerics_scope(pol), rn.layer_scope("v.w"):
+            return rn.nmatmul(a, w)
+
+    got = jax.vmap(scoped_fn)(xs)
+    ref = jax.vmap(lambda a: _kwarg_nmatmul(a, w, pol, "v.w"))(xs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def _lm_setup(arch="qwen3-4b", B=2, S=16, seed=0):
+    cfg = get_arch(arch).reduced()
+    pp = transformer.init(cfg, jax.random.PRNGKey(seed))
+    params, _ = unzip(pp)
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    return cfg, params, {"tokens": toks}
+
+
+def test_scanned_transformer_under_policy_scope_in_jit():
+    """Scanned transformer blocks under a uniform policy inside jax.jit are
+    bit-identical to the same blocks under the equivalent plain config —
+    the scope machinery resolves at trace time and leaves no residue in
+    the compiled computation."""
+    cfg, params, batch = _lm_setup()
+    pol = rn.NumericsPolicy((("blocks.*", SEG1),), default=SEG1)
+    cfg_pol = dataclasses.replace(cfg, numerics=pol)
+    cfg_cfg = dataclasses.replace(cfg, numerics=SEG1)
+
+    run = lambda c: jax.jit(
+        lambda p, b: transformer.backbone(p, c, b, mode="train")[0])(
+            params, batch)
+    np.testing.assert_array_equal(np.asarray(run(cfg_pol)),
+                                  np.asarray(run(cfg_cfg)))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_deprecated_kwarg_form_warns_once_per_site(rng):
+    x, w = _xw(rng)
+    rn.reset_deprecation_registry()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(3):  # same call site three times -> one warning
+            a = rn.nmatmul(x, w, SEG1, path="p")
+        b = rn.nmatmul(x, w, SEG1, path="p")  # different site -> warns again
+    deps = [r for r in rec if issubclass(r.category, DeprecationWarning)]
+    assert len(deps) == 2, [str(r.message) for r in rec]
+    assert "numerics_scope" in str(deps[0].message)
+    # and the shim still computes the same thing as the scoped form
+    with rn.numerics_scope(SEG1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(rn.nmatmul(x, w)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_path_only_shim_call_resolves_ambient_scope(rng):
+    """A half-migrated site that dropped cfg but kept path= must not
+    silently fall back to EXACT under an active scope — the path acts as
+    an inline layer_scope leaf."""
+    x, w = _xw(rng)
+    pol = rn.NumericsPolicy((("blocks.0.mlp.wi", SEG1),), default=EXACT_F32)
+    with rn.numerics_scope(pol), rn.layer_scope("blocks.0"), \
+            rn.layer_scope("mlp"):
+        got = _kwarg_nmatmul(x, w, None, "wi")
+    with rn.numerics_scope(SEG1):
+        want = rn.nmatmul(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # outside any scope the legacy behaviour holds: EXACT
+    bare = _kwarg_nmatmul(x, w, None, "wi")
+    np.testing.assert_array_equal(
+        np.asarray(bare), np.asarray(rn.nmatmul(x, w)))
+
+
+def test_scoped_form_does_not_warn(rng):
+    x, w = _xw(rng)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        with rn.numerics_scope(SEG1):
+            rn.nmatmul(x, w)
+    assert not [r for r in rec if issubclass(r.category, DeprecationWarning)]
+
+
+# ---------------------------------------------------------------------------
+# regression: every model call site resolves a non-empty full path
+# ---------------------------------------------------------------------------
+
+def _recorded_paths(run_fn, cfg_numerics_replace):
+    """Run one instrumented calibration pass; return the recorded paths."""
+    with sensitivity.record_operands() as store:
+        run_fn(sensitivity.calibration_policy(
+            rn.NumericsConfig(mode="exact", compute_dtype="float32")
+            if cfg_numerics_replace == "f32" else rn.EXACT))
+    return store
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mamba2-130m", "whisper-tiny"])
+def test_every_lm_call_site_resolves_nonempty_full_path(arch):
+    """The satellite regression for the old ``nmatmul(x, w, ncfg)``-with-
+    no-path bug: one instrumented pass over each model family must record
+    every enumerated layer path, and never an empty or relative one.
+    (``ssm.scan`` is a backend lookup, not a matmul site; the scanned
+    whisper encoder traces once, so its sites are invisible to the
+    eager-only tap — both are excluded by construction.)"""
+    cfg = get_arch(arch).reduced()
+    pp = transformer.init(cfg, jax.random.PRNGKey(0))
+    params, _ = unzip(pp)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)),
+                                   jnp.int32)}
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((1, 16, cfg.d_model)), jnp.float32)
+        cfg = dataclasses.replace(cfg, enc_len=16)
+
+    def run(policy):
+        pcfg = dataclasses.replace(cfg, numerics=policy)
+        h, _, _ = transformer.backbone(params, pcfg, batch, mode="train")
+        transformer.logits_fn(params, pcfg, h)
+
+    store = _recorded_paths(run, "bf16")
+    assert "" not in store
+    expected = {p for p in transformer.layer_paths(cfg)
+                if not p.endswith(".scan")
+                and not p.startswith("encoder.blocks.")}
+    assert set(store) == expected, (
+        sorted(expected - set(store)), sorted(set(store) - expected))
+
+
+def test_every_resnet_call_site_resolves_nonempty_full_path():
+    cfg = resnet.ResNetConfig(widths=(8, 16), blocks=(1, 1))
+    pp, state = resnet.init(cfg, jax.random.PRNGKey(0))
+    params, _ = unzip(pp)
+    images = jnp.asarray(np.random.default_rng(0).standard_normal((2, 8, 8, 3)),
+                         jnp.float32)
+
+    def run(policy):
+        pcfg = dataclasses.replace(cfg, numerics=policy)
+        resnet.apply(params, state, images, pcfg, train=False)
+
+    store = _recorded_paths(run, "f32")
+    assert "" not in store
+    assert set(store) == set(resnet.layer_paths(cfg))
+
+
+def test_tap_records_absolute_path_under_scoped_policy_ambient(rng):
+    """A ScopedPolicy ambient (the incremental-migration sugar, e.g.
+    block_apply(ncfg=policy.scope("blocks.0"))) carries a prefix: the
+    operand tap must record the ABSOLUTE path, matching the deprecated
+    kwarg branch's cfg.full_path(path) behaviour."""
+    x, w = _xw(rng)
+    pol = sensitivity.calibration_policy(EXACT_F32)
+    with sensitivity.record_operands() as store:
+        with rn.numerics_scope(pol.scope("blocks.0").scope("mlp")), \
+                rn.layer_scope("wi"):
+            rn.nmatmul(x, w)
+    assert set(store) == {"blocks.0.mlp.wi"}
+    # and resolution under the view still applies the prefixed rules
+    pol2 = rn.NumericsPolicy((("blocks.0.mlp.wi", SEG1),), default=EXACT_F32)
+    with rn.numerics_scope(pol2.scope("blocks.0")), rn.layer_scope("mlp.wi"):
+        got = rn.nmatmul(x, w)
+    with rn.numerics_scope(SEG1):
+        want = rn.nmatmul(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_unembed_records_lm_head_path(rng):
+    """models/layers.py:unembed previously called nmatmul with no path and
+    was invisible to policies and the tap; it must resolve ``lm_head``."""
+    from repro.models.layers import unembed
+
+    table = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    pol = sensitivity.calibration_policy(EXACT_F32)
+    with sensitivity.record_operands() as store:
+        unembed(x, table, pol)
+    assert set(store) == {"lm_head"}
+    # and a policy rule targeting lm_head actually applies
+    pol2 = rn.NumericsPolicy((("lm_head", SEG1),), default=EXACT_F32)
+    got = unembed(x, table, pol2)
+    with rn.numerics_scope(SEG1):
+        want = rn.nmatmul(x, table.T)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

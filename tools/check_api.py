@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Public-API surface check: ``repro.numerics`` and ``repro.session``.
+
+Snapshots every ``__all__`` export of the two public modules — kind
+(function / class / value) and ``inspect`` signature, plus public method
+signatures for classes — into ``tests/golden/api_surface.json``.  CI (and
+``tests/test_api_surface.py``) fails on any undeclared drift, so breaking
+the surface requires an explicit regeneration in the same commit:
+
+    PYTHONPATH=src python tools/check_api.py --write
+
+Run with no arguments to verify (exit 1 + a diff summary on drift).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO, "tests", "golden", "api_surface.json")
+MODULES = ["repro.numerics", "repro.session"]
+
+
+def _signature(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (ValueError, TypeError):
+        return "(...)"
+
+
+def _describe(obj) -> dict:
+    if inspect.isclass(obj):
+        methods = {}
+        for name, fn in sorted(vars(obj).items()):
+            if name.startswith("_") and name != "__init__":
+                continue
+            if isinstance(fn, property):
+                methods[name] = "<property>"
+            elif isinstance(fn, (classmethod, staticmethod)):
+                methods[name] = _signature(fn.__func__)
+            elif callable(fn):
+                methods[name] = _signature(fn)
+        return {"kind": "class", "signature": _signature(obj),
+                "methods": methods}
+    if callable(obj):
+        return {"kind": "function", "signature": _signature(obj)}
+    return {"kind": "value", "type": type(obj).__name__}
+
+
+def snapshot() -> dict:
+    out = {}
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        exports = {}
+        for name in sorted(mod.__all__):
+            exports[name] = _describe(getattr(mod, name))
+        out[modname] = exports
+    return out
+
+
+def _flatten(d, prefix=""):
+    for k, v in d.items():
+        key = f"{prefix}.{k}" if prefix else k
+        if isinstance(v, dict):
+            yield from _flatten(v, key)
+        else:
+            yield key, v
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the golden snapshot")
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    current = snapshot()
+    if args.write:
+        with open(GOLDEN, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+            f.write("\n")
+        n = sum(len(v) for v in current.values())
+        print(f"[check_api] wrote {GOLDEN} ({n} exports)")
+        return 0
+
+    try:
+        with open(GOLDEN) as f:
+            golden = json.load(f)
+    except OSError as e:
+        print(f"[check_api] missing golden snapshot {GOLDEN}: {e}")
+        return 1
+    if current == golden:
+        n = sum(len(v) for v in current.values())
+        print(f"[check_api] OK: {n} exports match {os.path.relpath(GOLDEN, REPO)}")
+        return 0
+
+    cur = dict(_flatten(current))
+    gold = dict(_flatten(golden))
+    for key in sorted(gold.keys() - cur.keys()):
+        print(f"[check_api] REMOVED: {key} (was {gold[key]!r})")
+    for key in sorted(cur.keys() - gold.keys()):
+        print(f"[check_api] ADDED:   {key} = {cur[key]!r}")
+    for key in sorted(cur.keys() & gold.keys()):
+        if cur[key] != gold[key]:
+            print(f"[check_api] CHANGED: {key}: {gold[key]!r} -> {cur[key]!r}")
+    print("[check_api] public API drift detected — if intentional, "
+          "regenerate with: PYTHONPATH=src python tools/check_api.py --write")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
