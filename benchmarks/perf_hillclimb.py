@@ -7,6 +7,13 @@ show the full hypothesis -> change -> before/after chain.
 
 Run single experiments (each is a fresh process — 512 fake devices):
   PYTHONPATH=src python -m benchmarks.perf_hillclimb --exp qwen3_zero_dp
+
+``--policy policy.json`` additionally applies an auto-configured
+per-layer NumericsPolicy (``python -m repro.session auto-configure
+--out policy.json``, or ``benchmarks/table4_resnet.py --auto``) on top
+of the experiment's config transform — the plumbing that lets a
+budget-fitted policy's roofline be hillclimbed like any other config
+change.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -125,15 +132,20 @@ EXPERIMENTS = {
 }
 
 
-def run_experiment(tag: str):
+def run_experiment(tag: str, policy_path: str | None = None):
     from repro.configs import get_arch
     from repro.launch import dryrun
-    from repro.session import Session
+    from repro.session import Session, load_policy
 
     arch, shape, transform, hypothesis = EXPERIMENTS[tag]
     cfg = get_arch(arch)
     if transform is not None:
         cfg = transform(cfg)
+    if policy_path is not None:
+        # serve an auto-configured per-layer policy in this cell (the
+        # sweep's output plugged straight into the roofline harness)
+        cfg = dataclasses.replace(cfg, numerics=load_policy(policy_path))
+        hypothesis += f" [+ per-layer policy {policy_path}]"
     # a Session over the transformed full-size config IS the experiment
     # spec — no get_arch monkeypatching needed
     rec = dryrun.lower_session_cell(Session(cfg), shape, multi_pod=False)
@@ -154,8 +166,11 @@ def run_experiment(tag: str):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", required=True, choices=sorted(EXPERIMENTS))
+    ap.add_argument("--policy", default=None, metavar="POLICY_JSON",
+                    help="apply an auto-configured NumericsPolicy on top of "
+                         "the experiment's config transform")
     args = ap.parse_args()
-    run_experiment(args.exp)
+    run_experiment(args.exp, policy_path=args.policy)
 
 
 if __name__ == "__main__":

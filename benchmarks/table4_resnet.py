@@ -157,7 +157,10 @@ def run_auto(budget=1e-2, train_steps=120, calib_n=32, candidates="segmented",
           f"(-{res.area_reduction:.1%})  [{res.n_evals} calibration evals]")
     if res.method == "proxy":
         measured = mred(np.asarray(sess.apply(images)), ref)
-        print(f"[auto] measured error of emitted policy: {measured:.3e}")
+        health = measured / max(res.error, 1e-30)
+        print(f"[auto] measured error of emitted policy: {measured:.3e} "
+              f"(measured/composed {health:.2f}x — the gain-aware model "
+              f"should bracket this near 1; see docs/sensitivity.md)")
     for path, name in res.assignments:
         print(f"  {path:16s} -> {name}")
     if out:

@@ -43,6 +43,7 @@ __all__ = [
     "ambient_view",
     "current_numerics",
     "current_path",
+    "force_unroll_active",
     "layer_scope",
     "maybe_numerics_scope",
     "numerics_scope",
@@ -101,6 +102,15 @@ def layer_scope(name):
 def current_numerics():
     """The innermost ambient Numerics, or None outside any scope."""
     return _STATE.numerics[-1] if _STATE.numerics else None
+
+
+def force_unroll_active() -> bool:
+    """True when the ambient numerics is a calibration policy
+    (``NumericsPolicy.force_unroll``): scanned structure — decoder segment
+    repeats and the whisper-style encoder stack — must execute eagerly and
+    un-remat'ed so the sensitivity operand tap (``repro.core.sensitivity``)
+    sees concrete arrays at every call site."""
+    return bool(getattr(current_numerics(), "force_unroll", False))
 
 
 def current_path(leaf: str = "") -> str:

@@ -1,4 +1,4 @@
-"""Composed-error sensitivity model — one calibration pass, O(L) configuration.
+"""Gain-aware composed-error sensitivity model — one calibration pass.
 
 The greedy auto-configurer (``repro.core.sweep.auto_configure``,
 ``method="greedy"``) re-evaluates the whole network once per candidate
@@ -9,30 +9,82 @@ calibration pass**:
 
 1. ``record_operands`` installs the operand tap in ``repro.core.numerics``;
    one forward under the (default-only) calibration policy records, per
-   ``nmatmul`` call site, a bounded sample of its operand distribution and
-   the rms magnitude of its exact product.  Scanned transformer segments
-   are transparently unrolled for the pass (``NumericsPolicy.force_unroll``)
-   so every site executes eagerly with concrete operands.
-2. Per site, the **local error** of a candidate design is the MRED of the
-   recorded operand sample pushed through that design — no network in the
-   loop, just a tiny matmul per (site, candidate).
-3. Per site, a first-order **error-propagation coefficient** ``alpha``
-   maps call-site MRED into network-output error: under the unit-gain
-   residual-stream assumption, a relative perturbation of magnitude
-   ``delta`` injected at a site whose output rms is ``r`` arrives at the
-   network output (the last executed site: ``fc`` / ``lm_head``) as an
-   absolute perturbation ``delta * r``, i.e. a relative output error
-   ``delta * r / r_last`` — so ``alpha = out_rms / out_rms_last``.
-4. The **composed error** of an assignment is the linear first-order sum
-   ``sum_l alpha_l * delta_l`` — deliberately conservative versus an RSS
-   composition (independent per-site errors partially cancel), so the
-   prediction upper-bounds the typical measured error.
+   ``nmatmul`` call site, a bounded sample of its operand distribution,
+   the rms magnitudes of its input and its exact product, and a
+   **gain coefficient** (below).  Scanned segments — decoder repeats *and*
+   the whisper-style encoder stack — are transparently unrolled for the
+   pass (``NumericsPolicy.force_unroll``) so every site executes eagerly
+   with concrete operands; without the unroll, scanned sites see tracers
+   and are invisible to the tap.
+2. Per site, the **local error** of a candidate design is measured by
+   pushing the recorded operand sample through that design — no network
+   in the loop, just a tiny matmul per (site, candidate).  Two flavours:
+   :meth:`SensitivityModel.local_error` (MRED against the float64 exact
+   product — the paper's per-multiplier metric, diagnostic) and
+   :meth:`SensitivityModel.local_rms_error` (rms relative error **against
+   the calibration default design's own output** on the same sample, what
+   the composition model propagates).  The reference matters: the network
+   error ``eval_fn`` measures is against the *default-numerics* baseline,
+   so a candidate that rounds exactly like the default (segmented-1 under
+   a bf16-exact default is bitwise the same dot) must read as zero local
+   error, not as the default's own rounding.
+3. Per site, a **gain coefficient** ``g_i`` estimates the rms
+   amplification of the site's linear map on a *random* tangent — a
+   Jacobian-norm estimate from a JVP probe on the recorded operand sample
+   (``jax.jvp`` of ``t -> t @ w`` at the recorded ``x``), with a
+   finite-difference output-perturbation fallback when the JVP cannot be
+   taken.  The probe direction matters: recorded activations concentrate
+   on the map's loud singular directions, while an injected *error* is an
+   arbitrary direction — ``g_i`` measures what the map does to the
+   latter.
+4. The **composed error** of an assignment is a first-order sum: an error
+   injected at site ``i`` (rms relative size ``delta_i``, absolute rms
+   ``delta_i * out_rms_i``) reaches the network head scaled by the
+   **downstream gain** ``G_i`` — the product of the gain coefficients of
+   the sites it subsequently flows *through*.  The model multiplies gains
+   only along observed dataflow **chains** (site ``j``'s recorded input
+   equals site ``j-1``'s recorded output); across residual/branching
+   structure, where the perturbation rides the identity stream rather
+   than the branch matmuls, the unit-gain residual-stream assumption
+   stands (``G`` contribution 1).  At the head, the absolute rms error is
+   converted to the *measured* metric (MRED, a mean of per-element
+   relative errors) through the **tail factor** ``sqrt(2/pi) *
+   mean(1/|y|) * rms(y)`` computed on the recorded head sample — MRED's
+   small-|y| denominators make it systematically larger than the rms
+   ratio, and ignoring that was the dominant source of the old flat
+   model's ~2x under-prediction on deep stacks.
+
+   Putting it together::
+
+       predict(assign) = baseline
+                       + sum_i calls_i * tail * alpha_i * G_i * delta_rms_i
+       alpha_i = out_rms_i / out_rms_head          (flat first-order term)
+       G_i     = prod_{j in downstream chain of i} g_j
+       tail    = sqrt(2/pi) * mean(1/|y_head|) * rms(y_head)
+       calls_i = executions of the site during the pass (1 everywhere
+                 except the unindexed scanned-encoder sites, where one
+                 path stands for ``encoder_layers`` injections)
+
+   The composition stays deliberately linear (no RSS cancellation
+   credit), so the prediction upper-bounds the typical measured error
+   while the gain and tail terms remove the systematic under-prediction.
+
+Model assumptions, explicitly: (a) first-order — per-site errors are
+small enough that their images at the head superpose linearly; (b) linear
+composition over sites — no cancellation credit between sites; (c) gain
+enters per call site as a random-direction Jacobian-norm estimate of that
+site's own map, composed multiplicatively only along recorded
+input-equals-previous-output chains, with unit gain elsewhere (the
+residual-stream assumption); (d) the head's recorded sample is
+representative of the output magnitude distribution the measured MRED is
+taken over.  See ``docs/sensitivity.md`` for the worked derivation and
+the trade-off against the greedy baseline.
 
 The cross-validation tests (``tests/test_sensitivity.py``) pin the proxy
 against the greedy baseline on the ResNet-18 calibration setup, and the
 property tests (``tests/test_hypothesis_properties.py``) assert the
-composed prediction brackets measured network error within a stated
-factor on random layer stacks.
+composed prediction brackets measured network error within pinned factors
+on random layer stacks and a 2-block transformer stack.
 """
 from __future__ import annotations
 
@@ -40,6 +92,7 @@ import contextlib
 import dataclasses
 from typing import Dict, Mapping, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -53,10 +106,24 @@ from .scope import numerics_scope
 MAX_ROWS = 64
 MAX_COLS = 64
 
+# the gain probe: a fixed-seed random tangent (deterministic, so the
+# recorded coefficients are reproducible and golden-pinnable)
+PROBE_SEED = 20260730
+# chain detection: site j is "chained" to site j-1 when its recorded input
+# sample equals site j-1's recorded exact output within this tolerance.
+# The comparison is between the eager pass's actual output (computed under
+# the calibration default — bf16 operand rounding for the LM zoo's
+# exact-bf16 default, ~4e-3 per element with cancellation spikes) and the
+# tap's float64 reference product, so the tolerance must swallow the
+# default design's own rounding; unrelated tensors differ at O(1) per
+# element, so a loose tolerance cannot false-positive a 64x64 allclose.
+CHAIN_RTOL = 5e-2
+CHAIN_ATOL = 2e-2  # x rms(prev output)
+
 
 @dataclasses.dataclass(frozen=True)
 class SiteRecord:
-    """One call site's recorded operand distribution."""
+    """One call site's recorded operand distribution + gain coefficient."""
 
     path: str
     x: np.ndarray          # (<=MAX_ROWS, K) float32 operand rows
@@ -64,6 +131,9 @@ class SiteRecord:
     out_rms: float         # rms of the exact (float64) sample product
     order: int             # execution order of the site's first call
     calls: int = 1         # times the site was hit during the pass
+    in_rms: float = 0.0    # rms of the recorded x sample
+    gain: float = 1.0      # random-tangent rms gain of t -> t @ w (JVP probe)
+    chained: bool = False  # input sample == previous site's output sample
 
 
 def _strided(n: int, limit: int) -> np.ndarray:
@@ -72,18 +142,70 @@ def _strided(n: int, limit: int) -> np.ndarray:
     return np.unique(np.linspace(0, n - 1, limit).astype(np.int64))
 
 
+def _rms(a: np.ndarray) -> float:
+    a = np.asarray(a, np.float64)
+    return float(np.sqrt(np.mean(a * a))) if a.size else 0.0
+
+
+def probe_gain(x: np.ndarray, w: np.ndarray, method: str = "jvp") -> float:
+    """Jacobian-norm estimate of the site's map on a random tangent.
+
+    ``rms(J v) / rms(v)`` for a fixed-seed tangent ``v`` shaped like the
+    recorded operand sample ``x`` — via ``jax.jvp`` of ``t -> t @ w`` at
+    ``x`` (``method="jvp"``), or the finite-difference output
+    perturbation ``(f(x + eps*v) - f(x)) / eps`` (``method="fd"``, the
+    fallback when the JVP cannot be taken).  The map is linear in ``x``,
+    so both estimates agree to rounding; what matters is the *random*
+    tangent: data directions concentrate on the loud singular vectors,
+    an injected error does not.
+    """
+    v = np.random.default_rng(PROBE_SEED).standard_normal(
+        x.shape).astype(np.float32)
+    v_rms = _rms(v)
+    if v_rms == 0.0:
+        return 1.0
+    if method == "jvp":
+        _, jv = jax.jvp(lambda t: jnp.matmul(t, jnp.asarray(w)),
+                        (jnp.asarray(x),), (jnp.asarray(v),))
+        jv = np.asarray(jv)
+    elif method == "fd":
+        eps = 1e-2
+        x64, w64 = x.astype(np.float64), w.astype(np.float64)
+        jv = ((x64 + eps * v.astype(np.float64)) @ w64 - x64 @ w64) / eps
+    else:
+        raise ValueError(f"unknown probe method {method!r}")
+    return _rms(jv) / v_rms
+
+
+def _site_gain(x: np.ndarray, w: np.ndarray) -> float:
+    """JVP probe with the finite-difference fallback (see :func:`probe_gain`)."""
+    try:
+        g = probe_gain(x, w, method="jvp")
+    except Exception:  # non-differentiable dtype / probe failure
+        g = probe_gain(x, w, method="fd")
+    return g if np.isfinite(g) and g > 0.0 else 1.0
+
+
 @contextlib.contextmanager
 def record_operands(max_rows: int = MAX_ROWS, max_cols: int = MAX_COLS):
     """Context manager: install the nmatmul operand tap, yield the store.
 
     The store maps full layer path -> :class:`SiteRecord`.  Repeat calls
     to the same path keep the first sample (one forward over a calibration
-    batch visits each site once; serving loops would revisit) and bump
-    ``calls``.  Sites reached with traced operands (inside scan/jit) are
-    invisible — run the pass eagerly with ``force_unroll``.
+    batch visits each site once; scanned encoder layers and serving loops
+    revisit) and bump ``calls``.  Sites reached with traced operands
+    (inside scan/jit) are invisible — run the pass eagerly with
+    ``force_unroll`` (both the decoder segments and the whisper-style
+    encoder honour it).
     """
     store: Dict[str, SiteRecord] = {}
     order = [0]
+    # chain probe: the previous site's exact sample product, the column
+    # indices it was sampled at, and its FULL output width — the next
+    # site's input is compared in the previous site's sampled column
+    # space, so chains are detected even when the intermediate width
+    # exceeds max_cols
+    prev_probe = [None]  # (exact_sample, col_idx, full_out_cols)
 
     def tap(path, x, w):
         if getattr(w, "ndim", 0) != 2:
@@ -95,13 +217,30 @@ def record_operands(max_rows: int = MAX_ROWS, max_cols: int = MAX_COLS):
         x2 = np.asarray(x, np.float32).reshape(-1, x.shape[-1])
         w2 = np.asarray(w, np.float32)
         x2 = x2[_strided(x2.shape[0], max_rows)]
-        w2 = w2[:, _strided(w2.shape[1], max_cols)]
+        cols = _strided(w2.shape[1], max_cols)
+        full_out_cols = w2.shape[1]
+        w2 = w2[:, cols]
         exact = x2.astype(np.float64) @ w2.astype(np.float64)
+        chained = False
+        if prev_probe[0] is not None:
+            p_exact, p_cols, p_full = prev_probe[0]
+            if (x2.shape[0] == p_exact.shape[0]
+                    and x2.shape[1] == p_full):
+                x_sub = x2[:, p_cols]
+                # atol scales with the signal: a fixed floor would let
+                # unrelated quiet tensors (rms << 1) false-positive
+                chained = bool(np.allclose(
+                    x_sub, p_exact, rtol=CHAIN_RTOL,
+                    atol=CHAIN_ATOL * _rms(p_exact)))
         store[path] = SiteRecord(
             path=path, x=x2, w=w2,
-            out_rms=float(np.sqrt(np.mean(exact * exact))),
-            order=order[0])
+            out_rms=_rms(exact),
+            order=order[0],
+            in_rms=_rms(x2),
+            gain=_site_gain(x2, w2),
+            chained=chained)
         order[0] += 1
+        prev_probe[0] = (exact, cols, full_out_cols)
 
     prev = set_operand_tap(tap)
     try:
@@ -111,11 +250,13 @@ def record_operands(max_rows: int = MAX_ROWS, max_cols: int = MAX_COLS):
 
 
 def propagation_coefficients(store: Mapping[str, SiteRecord]) -> Dict[str, float]:
-    """First-order alpha per site: ``out_rms / out_rms(last site)``.
+    """Flat first-order alpha per site: ``out_rms / out_rms(last site)``.
 
     The last-executed site is the network head (``fc`` / ``lm_head``), so
     its coefficient is exactly 1; upstream sites scale by how loud their
-    output is relative to the head's.
+    output is relative to the head's.  This is the *data-magnitude* term
+    of the composition — the gain and tail terms (:class:`SensitivityModel`)
+    multiply on top of it.
     """
     if not store:
         return {}
@@ -124,50 +265,147 @@ def propagation_coefficients(store: Mapping[str, SiteRecord]) -> Dict[str, float
     return {p: r.out_rms / net_rms for p, r in store.items()}
 
 
+def downstream_gains(store: Mapping[str, SiteRecord]) -> Dict[str, float]:
+    """Per site, the product of gain coefficients along its downstream
+    *chain*: starting from the next-executed site, multiply ``gain`` while
+    each successive site is ``chained`` to its predecessor; the first
+    unchained site ends the run (the perturbation rides the residual /
+    branching stream from there, unit gain).  The head's own coefficient
+    is 1."""
+    ordered = sorted(store.values(), key=lambda r: r.order)
+    out: Dict[str, float] = {}
+    # suffix pass: G_i = gain_{i+1} * G_{i+1} while site i+1 is chained
+    for i in range(len(ordered) - 1, -1, -1):
+        if i + 1 < len(ordered) and ordered[i + 1].chained:
+            out[ordered[i].path] = (ordered[i + 1].gain
+                                    * out[ordered[i + 1].path])
+        else:
+            out[ordered[i].path] = 1.0
+    return out
+
+
+def mred_tail_factor(store: Mapping[str, SiteRecord]) -> float:
+    """MRED-vs-rms conversion at the head: ``sqrt(2/pi) * mean(1/|y|) *
+    rms(y)`` over the head site's recorded exact sample (zero elements
+    masked, like :func:`repro.core.metrics.mred`).
+
+    For a centered error ``e`` independent of the output ``y``,
+    ``E[|e|/|y|] = E[|e|] * E[1/|y|] = sqrt(2/pi) * rms(e) * E[1/|y|]`` —
+    so predicted-MRED = tail * (rms-relative error).  Heavy small-``|y|``
+    tails (logits near decision boundaries) push this well above 1; the
+    flat model's implicit ``tail = 1`` was the dominant source of its ~2x
+    composed-error under-prediction on deep stacks.
+    """
+    if not store:
+        return 1.0
+    last = max(store.values(), key=lambda r: r.order)
+    y = (last.x.astype(np.float64) @ last.w.astype(np.float64)).ravel()
+    y = y[y != 0.0]
+    if y.size == 0:
+        return 1.0
+    return float(np.sqrt(2.0 / np.pi) * np.mean(1.0 / np.abs(y)) * _rms(y))
+
+
 @dataclasses.dataclass
 class SensitivityModel:
-    """Per-site operand records + propagation coefficients + error cache."""
+    """Per-site records + propagation/gain coefficients + error caches.
+
+    ``alpha`` is the flat data-magnitude coefficient, ``gain`` the per-site
+    downstream-chain gain product ``G_i``, ``tail`` the head's MRED
+    conversion factor; :meth:`contribution` composes all three with the
+    site's local rms error (see the module docstring for the formula and
+    its assumptions).
+    """
 
     sites: Dict[str, SiteRecord]
     alpha: Dict[str, float]
     baseline_error: float = 0.0    # eval_fn under the default-only policy
+    gain: Dict[str, float] = dataclasses.field(default_factory=dict)
+    tail: float = 1.0
+    # the design local rms errors are measured against: the calibration
+    # default (what eval_fn's reference ran), or None for the float64
+    # exact product
+    reference: Optional[NumericsConfig] = None
 
     def __post_init__(self):
         self._local: Dict[Tuple[str, NumericsConfig], float] = {}
+        self._local_rms: Dict[Tuple[str, NumericsConfig], float] = {}
+        self._ref: Dict[str, np.ndarray] = {}  # per-path reference output
+        if not self.gain:
+            self.gain = downstream_gains(self.sites)
 
     @classmethod
     def from_store(cls, store: Mapping[str, SiteRecord],
-                   baseline_error: float = 0.0) -> "SensitivityModel":
+                   baseline_error: float = 0.0,
+                   reference: Optional[NumericsConfig] = None,
+                   ) -> "SensitivityModel":
         return cls(dict(store), propagation_coefficients(store),
-                   baseline_error)
+                   baseline_error, downstream_gains(store),
+                   mred_tail_factor(store), reference)
+
+    def _approx(self, path: str, cfg: NumericsConfig) -> np.ndarray:
+        r = self.sites[path]
+        with numerics_scope(cfg):
+            return np.asarray(
+                nmatmul(jnp.asarray(r.x), jnp.asarray(r.w)), np.float64)
+
+    def _reference(self, path: str) -> np.ndarray:
+        if path not in self._ref:  # cached: one reference per path, not
+            r = self.sites[path]   # one per (path, candidate) pair
+            self._ref[path] = (
+                r.x.astype(np.float64) @ r.w.astype(np.float64)
+                if self.reference is None
+                else self._approx(path, self.reference))
+        return self._ref[path]
 
     def local_error(self, path: str, cfg: NumericsConfig) -> float:
-        """MRED the design induces at ``path`` on its recorded operands."""
+        """MRED the design induces at ``path`` on its recorded operands,
+        against the float64 exact product (the paper's per-multiplier
+        metric; diagnostic, not what the composition propagates)."""
         key = (path, cfg)
         if key not in self._local:
             r = self.sites[path]
             exact = r.x.astype(np.float64) @ r.w.astype(np.float64)
-            with numerics_scope(cfg):
-                approx = np.asarray(
-                    nmatmul(jnp.asarray(r.x), jnp.asarray(r.w)), np.float64)
-            self._local[key] = mred(approx, exact)
+            self._local[key] = mred(self._approx(path, cfg), exact)
         return self._local[key]
 
+    def local_rms_error(self, path: str, cfg: NumericsConfig) -> float:
+        """rms relative error the design induces at ``path`` on its
+        recorded operands — ``rms(approx - ref) / rms(ref)`` where ``ref``
+        is the calibration default's own output (:attr:`reference`; the
+        float64 exact product when None).  This is the quantity linear
+        maps transport, i.e. what :meth:`contribution` propagates."""
+        key = (path, cfg)
+        if key not in self._local_rms:
+            ref = self._reference(path)
+            err = self._approx(path, cfg) - ref
+            self._local_rms[key] = _rms(err) / max(_rms(ref), 1e-30)
+        return self._local_rms[key]
+
     def contribution(self, path: str, cfg: NumericsConfig) -> float:
-        """Predicted network-output error contribution of one assignment."""
-        return self.alpha[path] * self.local_error(path, cfg)
+        """Predicted network-output MRED contribution of one assignment:
+        ``calls * tail * alpha * G * local_rms_error`` (gain-aware
+        composition).  ``calls`` weights execution multiplicity: an
+        unindexed ``encoder.blocks.*`` site runs once per scanned encoder
+        layer during the (unrolled) calibration pass, and each execution
+        injects the design's error independently — the linear composition
+        must count every injection, not just the first recorded sample."""
+        return (self.sites[path].calls * self.tail * self.alpha[path]
+                * self.gain.get(path, 1.0)
+                * self.local_rms_error(path, cfg))
 
     def predict(self, assignments: Mapping[str, NumericsConfig]) -> float:
-        """Composed network error of a per-site assignment (first-order sum
-        over the assigned sites, on top of the baseline)."""
+        """Composed network error of a per-site assignment (first-order,
+        linear over the assigned sites, on top of the baseline)."""
         return self.baseline_error + sum(
             self.contribution(p, c) for p, c in assignments.items()
             if p in self.sites)
 
 
 class _CalibrationPolicy(NumericsPolicy):
-    """Default-only policy that forces scanned segments to unroll so the
-    operand tap sees concrete arrays at every call site."""
+    """Default-only policy that forces scanned segments — decoder repeats
+    and the whisper-style encoder stack — to unroll so the operand tap
+    sees concrete arrays at every call site."""
 
     force_unroll = True
 
@@ -183,4 +421,5 @@ def calibrate(eval_fn, default: Optional[NumericsConfig] = None,
     :class:`SensitivityModel` (``eval_fn`` is invoked exactly once)."""
     with record_operands(max_rows, max_cols) as store:
         base = float(eval_fn(calibration_policy(default)))
-    return SensitivityModel.from_store(store, baseline_error=base)
+    return SensitivityModel.from_store(store, baseline_error=base,
+                                       reference=default or EXACT)

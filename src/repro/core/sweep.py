@@ -14,11 +14,18 @@ whose composed network error stays within budget, and emits a serializable
 :class:`~repro.core.policy.NumericsPolicy`.  Two methods:
 
 ``method="proxy"`` (default)
-    One instrumented calibration pass fits the composed-error sensitivity
-    model (``repro.core.sensitivity``); the assignment is then solved as a
-    knapsack-style exchange over modeled per-site contributions —
-    O(layers x designs) local matmuls, exactly **one** ``eval_fn``
-    invocation.  Scales to the LM zoo.
+    One instrumented calibration pass fits the gain-aware composed-error
+    sensitivity model (``repro.core.sensitivity``): per-site operand
+    samples, flat propagation coefficients ``alpha``, JVP-probe gain
+    coefficients composed along observed dataflow chains, and the head's
+    MRED tail factor.  The assignment is then solved as a knapsack-style
+    exchange over the modeled per-site contributions ``tail * alpha * G *
+    local_rms_error`` — O(layers x designs) local matmuls, exactly
+    **one** ``eval_fn`` invocation.  Scales to the LM zoo.  The model is
+    first-order and composes linearly over sites (no cancellation
+    credit): predictions upper-bound the typical measured error (see
+    ``docs/sensitivity.md`` and the brackets pinned in
+    ``tests/test_hypothesis_properties.py``).
 ``method="greedy"``
     The original schedule: probe each layer, then re-evaluate the whole
     network per candidate assignment — O(layers x designs) *full-network*
@@ -210,13 +217,15 @@ def auto_configure(eval_fn: Callable[[NumericsPolicy], float],
 
     ``method="proxy"`` (default) spends exactly one ``eval_fn`` call: the
     instrumented calibration pass of ``repro.core.sensitivity`` records
-    per-site operand distributions and propagation coefficients, then a
+    per-site operand distributions, propagation coefficients and gain
+    coefficients (the gain-aware composed-error model), then a
     knapsack-style exchange assigns each site the cheapest design whose
     composed (modeled) error stays within budget — the proxy pass must run
     the network eagerly (no surrounding jit) so the operand tap sees
-    concrete arrays.  ``method="greedy"`` keeps the original measured-error
-    schedule: ``O(L)`` probe evals plus up to ``O(L * C)`` assignment
-    evals, each a full-network run.
+    concrete arrays; scanned segments and the whisper-style encoder are
+    unrolled automatically for the pass.  ``method="greedy"`` keeps the
+    original measured-error schedule: ``O(L)`` probe evals plus up to
+    ``O(L * C)`` assignment evals, each a full-network run.
     """
     if method not in ("proxy", "greedy"):
         raise ValueError(f"unknown method {method!r}; expected 'proxy' or 'greedy'")
@@ -279,18 +288,31 @@ def _proxy_configure(eval_fn, layer_paths, error_budget, cand, default,
     option, the default included as the zero-error anchor) with the best
     error-reduction-per-area ratio.  Terminates within budget because the
     all-default assignment contributes zero composed error.
+
+    Site areas are weighted by the execution multiplicity the calibration
+    pass observed (``SiteRecord.calls``): an unindexed ``encoder.blocks.*``
+    site stands for ``encoder_layers`` physical multiplier instances, and
+    its contribution is already ``calls``-weighted — both sides of the
+    error-per-area exchange ratio (and the reported area roll-up) must
+    count the same instances or encoder sites look ``calls``-times more
+    error-efficient per um^2 than they are.
     """
     from . import sensitivity as sens_mod  # deferred: keeps sweep importable alone
 
     model = sens_mod.calibrate(eval_fn, default=default)
     areas = [(name, c, config_ppa(c).logic_area_um2) for name, c in cand]
+    # physical multiplier instances per path (1 unless the pass executed
+    # the site multiple times — the unrolled scanned encoder)
+    mult = {p: (model.sites[p].calls if p in model.sites else 1)
+            for p in layer_paths}
 
     opts = {}       # path -> [(name or None, cfg, area, contribution)]
     for p in layer_paths:
         if p not in model.sites:
             continue  # never executed on the calibration batch: stays default
-        o = [(name, c, a, model.contribution(p, c)) for name, c, a in areas]
-        o.append((None, default, exact_area, 0.0))
+        o = [(name, c, a * mult[p], model.contribution(p, c))
+             for name, c, a in areas]
+        o.append((None, default, exact_area * mult[p], 0.0))
         opts[p] = o
     if layer_paths and not opts:
         raise ValueError(
@@ -347,19 +369,21 @@ def _proxy_configure(eval_fn, layer_paths, error_budget, cand, default,
             if p in assign:
                 name, _, _, contrib = assign[p]
                 print(f"[auto_configure/proxy] {p:24s} -> {name:12s} "
-                      f"alpha={model.alpha[p]:.3f} contrib={contrib:.3e}")
+                      f"alpha={model.alpha[p]:.3f} "
+                      f"G={model.gain.get(p, 1.0):.3f} "
+                      f"contrib={contrib:.3e}")
             elif p in opts:
                 print(f"[auto_configure/proxy] {p:24s} -> default")
         print(f"[auto_configure/proxy] composed error {total:.3e} "
               f"(budget {error_budget:.3e}, baseline "
-              f"{model.baseline_error:.3e})")
+              f"{model.baseline_error:.3e}, tail x{model.tail:.2f})")
     policy = NumericsPolicy.from_assignments(
         {p: c for p, (_, c, _, _) in assign.items()}, default=default)
     return AutoConfigResult(
         policy=policy,
         error=total,
-        area_um2=policy_area(policy, layer_paths),
-        baseline_area_um2=exact_area * len(layer_paths),
+        area_um2=policy_area(policy, layer_paths, counts=mult),
+        baseline_area_um2=exact_area * sum(mult[p] for p in layer_paths),
         assignments=tuple((p, assign[p][0]) for p in layer_paths if p in assign),
         n_evals=1,
         method="proxy",

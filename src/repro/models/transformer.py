@@ -27,9 +27,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.numerics import (current_numerics, expert_paths, is_policy,
-                            layer_scope, maybe_numerics_scope, nmatmul,
-                            numerics_scope, resolve)
+from repro.numerics import (current_numerics, expert_paths,
+                            force_unroll_active, is_policy, layer_scope,
+                            maybe_numerics_scope, nmatmul, numerics_scope,
+                            resolve)
 from repro.distributed.sharding import logical_constraint
 
 from . import attention as attn
@@ -368,7 +369,7 @@ def _stack_apply(params, x, cfg, positions, mode, caches=None,
             # A force_unroll (calibration) policy additionally skips remat —
             # jax.checkpoint traces its body, which would hide operands from
             # the sensitivity tap.
-            wrap = ((lambda f: f) if getattr(ncfg, "force_unroll", False)
+            wrap = ((lambda f: f) if force_unroll_active()
                     else (lambda f: _remat(f, cfg)))
             per_repeat = []
             for r in range(repeats):
@@ -566,5 +567,15 @@ def encoder_apply(params, cfg, batch, ncfg=None):
                                     mode="train", causal=False)
             return x, {}
 
-        x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+        if force_unroll_active():
+            # sensitivity calibration: the scan traces its body once, so
+            # the operand tap would never see concrete encoder operands —
+            # run each layer eagerly instead (no remat either: checkpoint
+            # also traces).  Paths stay the unindexed ``encoder.blocks.*``
+            # (matching policy resolution), so the tap records one sample
+            # per site with ``calls == cfg.encoder_layers``.
+            for r in range(cfg.encoder_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[r], params["blocks"]))
+        else:
+            x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
         return rmsnorm(params["norm"], x, cfg.norm_eps)

@@ -40,8 +40,9 @@ from repro.core.policy import (Numerics, NumericsPolicy, PolicyRule,
                                ScopedPolicy, expert_paths, is_policy, resolve,
                                scoped)
 from repro.core.scope import (ambient_view, current_numerics, current_path,
-                              layer_scope, maybe_numerics_scope,
-                              numerics_scope, resolve_here)
+                              force_unroll_active, layer_scope,
+                              maybe_numerics_scope, numerics_scope,
+                              resolve_here)
 
 __all__ = [
     "BACKENDS",
@@ -56,6 +57,7 @@ __all__ = [
     "current_numerics",
     "current_path",
     "expert_paths",
+    "force_unroll_active",
     "is_policy",
     "layer_scope",
     "maybe_numerics_scope",

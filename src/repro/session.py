@@ -44,8 +44,8 @@ from repro.core.numerics import NumericsConfig
 from repro.core.policy import Numerics, NumericsPolicy, is_policy
 from repro.configs.base import ArchConfig
 
-__all__ = ["GenerateResult", "Session", "SessionError", "load_policy",
-           "print_ppa_report"]
+__all__ = ["GenerateResult", "Session", "SessionError", "build_parser",
+           "load_policy", "print_ppa_report"]
 
 
 class SessionError(RuntimeError):
@@ -341,11 +341,19 @@ class Session:
         network; adopts the emitted policy as the session numerics.
 
         ``calib`` is the calibration input — a token batch dict
-        (``{"tokens": ...}``) for the LM zoo (default: seeded random
-        tokens), an image array for ResNet sessions.  ``candidates`` is a
-        ``(name, NumericsConfig)`` list, ``"segmented"`` (default: the
-        split-float ladder) or ``"emulated"`` (bit-level Pareto designs).
-        Returns the :class:`repro.core.sweep.AutoConfigResult`.
+        (``{"tokens": ...}``, plus ``"enc_embeds"`` for encoder-decoder
+        archs) for the LM zoo (default: seeded random tokens, and seeded
+        random encoder embeddings when the arch has an encoder), an image
+        array for ResNet sessions.  ``candidates`` is a ``(name,
+        NumericsConfig)`` list, ``"segmented"`` (default: the split-float
+        ladder) or ``"emulated"`` (bit-level Pareto designs).
+
+        ``method="proxy"`` (default) fits the gain-aware composed-error
+        model from ONE instrumented pass (``repro.core.sensitivity``);
+        scanned decoder segments and the whisper-style encoder unroll
+        transparently during that pass, so every site —
+        ``encoder.blocks.*`` included — is visible to the calibration
+        tap.  Returns the :class:`repro.core.sweep.AutoConfigResult`.
         """
         import jax.numpy as jnp
 
@@ -390,6 +398,14 @@ class Session:
                 rng = np.random.default_rng(self.seed)
                 calib = {"tokens": jnp.asarray(
                     rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+                if cfg.encoder_layers:
+                    # encoder-decoder archs also need encoder inputs so the
+                    # calibration pass reaches the encoder.blocks.* sites
+                    # (cfg.enc_len itself only sizes serving caches, which
+                    # the train-mode calibration forward never allocates)
+                    enc_len = min(cfg.enc_len, 16)
+                    calib["enc_embeds"] = jnp.asarray(rng.standard_normal(
+                        (2, enc_len, cfg.d_model)), jnp.float32)
             # the default must match the network's own exact numerics (bf16
             # for the LM zoo) so the baseline itself reads as zero error
             default = default or NumericsConfig(mode="exact")
@@ -475,7 +491,9 @@ def print_ppa_report(ppa: dict, tag: str = "session") -> None:
           f"modeled compute latency x{ppa['compute_scale']:.2f}")
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The unified-CLI argument parser (also what ``tools/gen_cli_docs.py``
+    introspects to generate ``docs/cli.md`` — keep help strings current)."""
     ap = argparse.ArgumentParser(
         prog="repro.session",
         description="Unified Session CLI: generate / auto-configure / "
@@ -489,7 +507,8 @@ def main(argv=None) -> int:
     g.add_argument("--gen-len", type=int, default=16)
 
     a = sub.add_parser("auto-configure",
-                       help="budget-driven per-layer numerics sweep")
+                       help="budget-driven per-layer numerics sweep "
+                            "(proxy: ONE gain-aware calibration pass)")
     _add_common(a)
     a.add_argument("--budget", type=float, required=True)
     a.add_argument("--method", choices=["proxy", "greedy"], default="proxy")
@@ -512,8 +531,11 @@ def main(argv=None) -> int:
                    help="lower the reduced CPU-sized config instead of the "
                         "full arch (dryrun defaults to full-size so records "
                         "match python -m repro.launch.dryrun)")
+    return ap
 
-    args = ap.parse_args(argv)
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
     # dryrun lowers the full-size arch by default — its records must be
     # comparable with the launch.dryrun CLI; every other subcommand works
     # on the reduced config unless --full-size

@@ -13,7 +13,11 @@ deliberately sharing NO code with ``repro.core.policy`` /
    through a numpy reimplementation of the split-float segmented product
    (bf16 round-to-nearest-even via the integer carry trick) to produce
    per-site ``out_rms``, propagation coefficients ``alpha``, per-design
-   local MRED, and a composed prediction.  The consuming test
+   local MRED and local rms relative error, the random-tangent gain
+   coefficients (the JVP probe, reimplemented as a plain numpy matmul of
+   the same fixed-seed tangent), the downstream chain-gain products, the
+   head's MRED tail factor, and the gain-aware composed prediction
+   ``sum tail * alpha * G * local_rms``.  The consuming test
    (``tests/test_sensitivity.py``) rebuilds the model through the real
    operand tap and compares.
 
@@ -136,36 +140,76 @@ def mred(approx, exact):
                          / np.abs(exact[mask])))
 
 
+PROBE_SEED = 20260730  # must match repro.core.sensitivity.PROBE_SEED
+
+
+def rms(a):
+    a = np.asarray(a, np.float64)
+    return float(np.sqrt(np.mean(a * a)))
+
+
+def probe_gain_ref(x, w):
+    """Reference gain: rms(v @ w)/rms(v) for the fixed-seed tangent the
+    JVP probe uses (the map is linear, so the JVP of t -> t @ w IS v @ w)."""
+    v = np.random.default_rng(PROBE_SEED).standard_normal(
+        np.asarray(x).shape).astype(np.float32)
+    return rms(np.matmul(v, np.asarray(w, np.float32), dtype=np.float32)) \
+        / rms(v)
+
+
 def build_sensitivity_fixture(seed=20260730):
     """A 3-site chain (the output of one site feeds the next) with fixed-
-    PRNG operands; expected alpha / local errors / composed prediction."""
+    PRNG operands; expected alpha / gains / tail / local errors / composed
+    prediction for the gain-aware model."""
     rng = np.random.default_rng(seed)
     shapes = [(12, 8, 6), (12, 6, 10), (12, 10, 4)]
     names = ["s0", "s1", "s2"]
     h = rng.standard_normal((shapes[0][0], shapes[0][1])).astype(np.float32)
     sites = []
+    head_exact = None
     for name, (m, k, n) in zip(names, shapes):
         w = (rng.standard_normal((k, n)) / np.sqrt(k)).astype(np.float32)
         exact = h.astype(np.float64) @ w.astype(np.float64)
         local = {f"seg{p}": mred(segmented_matmul(h, w, p), exact)
                  for p in (1, 2, 3)}
+        local_rms = {
+            f"seg{p}": rms(segmented_matmul(h, w, p).astype(np.float64)
+                           - exact) / rms(exact)
+            for p in (1, 2, 3)}
         sites.append({
             "path": name,
             "x": [[float(v) for v in row] for row in h],
             "w": [[float(v) for v in row] for row in w],
-            "out_rms": float(np.sqrt(np.mean(exact * exact))),
+            "out_rms": rms(exact),
             "local_mred": local,
+            "local_rms": local_rms,
+            "site_gain": probe_gain_ref(h, w),
+            "chained": name != "s0",  # each site consumes the previous output
         })
         h = exact.astype(np.float32)  # exact f32 chain, like the eager pass
+        head_exact = exact
     net_rms = sites[-1]["out_rms"]
     for s in sites:
         s["alpha"] = s["out_rms"] / net_rms
-    # composed first-order prediction for a mixed assignment
+    # downstream chain-gain products: G_i = prod of site_gain over the
+    # chained successors (the whole suffix here — it is a pure chain)
+    for i, s in enumerate(sites):
+        g = 1.0
+        for nxt in sites[i + 1:]:
+            if not nxt["chained"]:
+                break
+            g *= nxt["site_gain"]
+        s["downstream_gain"] = g
+    # MRED tail factor at the head: sqrt(2/pi) * mean(1/|y|) * rms(y)
+    y = head_exact.ravel()
+    y = y[y != 0.0]
+    tail = float(np.sqrt(2.0 / np.pi) * np.mean(1.0 / np.abs(y)) * rms(y))
+    # gain-aware composed prediction for a mixed assignment
     assignment = {"s0": "seg1", "s1": "seg3", "s2": "seg2"}
-    composed = sum(s["alpha"] * s["local_mred"][assignment[s["path"]]]
-                   for s in sites)
+    composed = sum(tail * s["alpha"] * s["downstream_gain"]
+                   * s["local_rms"][assignment[s["path"]]] for s in sites)
     return {"seed": seed, "sites": sites, "assignment": assignment,
-            "composed_prediction": composed}
+            "tail_factor": tail, "composed_prediction": composed}
 
 
 def main():

@@ -1,5 +1,7 @@
-"""Docs stay honest: intra-repo links resolve and fenced Python examples
-compile (same checks as the CI docs job, run locally by tier-1)."""
+"""Docs stay honest: intra-repo links + anchor fragments resolve, fenced
+Python examples compile, and the generated CLI reference is in sync
+(same checks as the CI docs job, run locally by tier-1)."""
+import importlib.util
 import subprocess
 import sys
 from pathlib import Path
@@ -7,9 +9,18 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 
 
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        name, REPO / "tools" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
 def test_docs_tree_exists():
     for f in ("docs/architecture.md", "docs/paper_map.md",
-              "docs/numerics_policy.md"):
+              "docs/numerics_policy.md", "docs/sensitivity.md",
+              "docs/cli.md"):
         assert (REPO / f).is_file(), f
 
 
@@ -22,15 +33,55 @@ def test_check_docs_passes():
 
 def test_check_docs_catches_broken_link(tmp_path):
     # the checker must actually fail on a broken link (guards the guard)
-    import importlib.util
-
-    spec = importlib.util.spec_from_file_location(
-        "check_docs", REPO / "tools" / "check_docs.py")
-    mod = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(mod)
+    mod = _load("check_docs")
     bad = tmp_path / "bad.md"
     bad.write_text("see [missing](does_not_exist.md)")
     assert mod.check_links(bad)
     fence = tmp_path / "fence.md"
     fence.write_text("```python\ndef broken(:\n```\n")
     assert mod.check_fences(fence)
+
+
+def test_check_docs_catches_broken_anchor(tmp_path):
+    """A renamed heading must no longer break links silently: the checker
+    validates `file.md#fragment` and in-page `#fragment` links against
+    GitHub-style heading slugs."""
+    mod = _load("check_docs")
+    target = tmp_path / "target.md"
+    target.write_text("# Top Title\n\n## A `code` — section!\n\n## Dup\n\n## Dup\n")
+    md = tmp_path / "doc.md"
+    md.write_text(
+        "[ok](target.md#top-title) [ok2](target.md#a-code--section)\n"
+        "[dup2](target.md#dup-1) [inpage](#local-heading)\n\n"
+        "## Local Heading\n")
+    assert mod.check_links(md) == []
+    bad = tmp_path / "bad.md"
+    bad.write_text("[stale](target.md#renamed-heading) [inpage](#nope)\n")
+    problems = mod.check_links(bad)
+    assert len(problems) == 2 and all("broken anchor" in p for p in problems)
+    # fragments on non-markdown targets are not anchor-checked
+    (tmp_path / "x.py").write_text("pass\n")
+    ok = tmp_path / "ok.md"
+    ok.write_text("[src](x.py#L3)\n")
+    assert mod.check_links(ok) == []
+
+
+def test_cli_reference_in_sync():
+    """docs/cli.md must match what tools/gen_cli_docs.py renders from the
+    live `python -m repro.session` parser (the CI docs job enforces the
+    same via tools/check_docs.py)."""
+    mod = _load("gen_cli_docs")
+    assert mod.render() == (REPO / "docs" / "cli.md").read_text(), \
+        "regenerate with: PYTHONPATH=src python tools/gen_cli_docs.py"
+
+
+def test_check_docs_catches_cli_drift(tmp_path, monkeypatch):
+    # guard the guard: a drifted cli.md must fail check_cli_sync
+    mod = _load("check_docs")
+    assert mod.check_cli_sync() == []
+    gen = _load("gen_cli_docs")
+    stale = tmp_path / "cli.md"
+    stale.write_text("# stale\n")
+    monkeypatch.setattr(gen, "OUT", stale)
+    monkeypatch.setitem(sys.modules, "gen_cli_docs", gen)
+    assert mod.check_cli_sync()

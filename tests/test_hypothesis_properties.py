@@ -181,16 +181,20 @@ def test_mred_monotone_non_increasing_in_width(family, seed):
 
 # ---- composed-error prediction brackets measured error ---------------------
 #
-# The sensitivity model's first-order composition (sum of alpha * local
-# MRED) must bracket the measured network MRED within stated factors on
-# random 2-4 layer linear stacks.  The bracket is asymmetric: the sum
-# composition deliberately over-predicts (independent per-layer errors
-# partially cancel — observed down to measured ~ pred/20), while MRED's
-# small-denominator tail can inflate the measured side (observed up to
-# ~13x over a 500-stack sweep); the stated factors carry ~2-3x headroom.
+# The gain-aware sensitivity model (rms local error vs the calibration
+# default, JVP-probe gains composed along dataflow chains, MRED tail
+# factor at the head — repro.core.sensitivity) must bracket the measured
+# network MRED within stated factors on random 2-4 layer linear stacks
+# and on a 2-block transformer stack.  The bracket is asymmetric: the
+# linear (no-cancellation) composition deliberately over-predicts
+# (independent per-site errors partially cancel), while MRED's
+# small-denominator tail can inflate the measured side.  The flat
+# (pre-gain) model needed 24x/64x here; the gain-aware model pins 6x/32x
+# — observed extremes over 700+ linear stacks and 52 transformer seeds
+# are 1.8x/14.6x, so the stated factors carry >= 2x headroom.
 
-BRACKET_OVER = 24.0    # measured <= pred * BRACKET_OVER
-BRACKET_UNDER = 64.0   # pred <= measured * BRACKET_UNDER
+BRACKET_OVER = 6.0     # measured <= pred * BRACKET_OVER      (was 24x flat)
+BRACKET_UNDER = 32.0   # pred <= (measured + baseline) * BRACKET_UNDER (was 64x)
 
 
 @given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 2 ** 16))
@@ -219,6 +223,10 @@ def test_composed_error_prediction_brackets_measured(depth, passes, seed):
         return 0.0
 
     model = sensitivity.calibrate(eval_fn, default=exact_f32)
+    # a pure chain: every site after the first consumes its predecessor's
+    # output, so the probe gains compose downstream
+    for i in range(1, depth):
+        assert model.sites[f"layer.{i}"].chained
     seg = NumericsConfig(mode="segmented", seg_passes=passes, backend="xla")
     assignment = {f"layer.{i}": seg for i in range(depth)}
     pred = model.predict(assignment)
@@ -228,6 +236,60 @@ def test_composed_error_prediction_brackets_measured(depth, passes, seed):
     assert pred > 0 and measured > 0
     assert measured <= pred * BRACKET_OVER, (depth, passes, pred, measured)
     assert pred <= measured * BRACKET_UNDER, (depth, passes, pred, measured)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=5, deadline=None)
+def test_composed_error_brackets_measured_on_2block_transformer(seed):
+    """The acceptance bracket on a real 2-block transformer stack (the
+    setup where the flat model under-predicted ~2x and needed the 24x
+    over-bracket): the gain-aware prediction stays within 6x/32x of the
+    measured logits MRED.  The UNDER side compares against ``measured +
+    baseline`` — the baseline term is the unrolled-calibration-vs-scanned
+    numeric wobble the model carries additively by construction, and the
+    scanned-vs-scanned measurement genuinely does not contain it."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.core import sensitivity
+    from repro.core.metrics import mred
+    from repro.core.numerics import NumericsConfig
+    from repro.core.policy import NumericsPolicy
+    from repro.models import transformer
+    from repro.models.layers import unzip
+
+    cfg = get_arch("qwen3-4b").reduced()
+    cfg = dataclasses.replace(cfg, segments=((2, cfg.segments[0][1]),))
+    pp = transformer.init(cfg, jax.random.PRNGKey(seed))
+    params, _ = unzip(pp)
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                   jnp.int32)}
+    default = NumericsConfig(mode="exact", compute_dtype="float32")
+    base_cfg = dataclasses.replace(cfg, numerics=default)
+    h, _, _ = transformer.backbone(params, base_cfg, batch, mode="train")
+    ref = np.asarray(transformer.logits_fn(params, base_cfg, h), np.float64)
+
+    def eval_fn(policy):
+        pcfg = dataclasses.replace(cfg, numerics=policy)
+        h, _, _ = transformer.backbone(params, pcfg, batch, mode="train")
+        return mred(np.asarray(transformer.logits_fn(params, pcfg, h)), ref)
+
+    model = sensitivity.calibrate(eval_fn, default=default)
+    seg1 = NumericsConfig(mode="segmented", seg_passes=1, backend="xla")
+    paths = [p for p in transformer.layer_paths(cfg)
+             if not p.endswith(".scan")]
+    assignment = {p: seg1 for p in paths}
+    pred = model.predict(assignment)
+    measured = eval_fn(NumericsPolicy.from_assignments(assignment,
+                                                       default=default))
+    assert pred > 0 and measured > 0
+    assert measured <= pred * BRACKET_OVER, (pred, measured)
+    assert pred <= (measured + model.baseline_error) * BRACKET_UNDER, (
+        pred, measured, model.baseline_error)
 
 
 @given(st.integers(1, 3), st.integers(2, 6), st.integers(2, 6))

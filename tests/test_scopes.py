@@ -238,9 +238,10 @@ def test_every_lm_call_site_resolves_nonempty_full_path(arch):
     """The satellite regression for the old ``nmatmul(x, w, ncfg)``-with-
     no-path bug: one instrumented pass over each model family must record
     every enumerated layer path, and never an empty or relative one.
-    (``ssm.scan`` is a backend lookup, not a matmul site; the scanned
-    whisper encoder traces once, so its sites are invisible to the
-    eager-only tap — both are excluded by construction.)"""
+    (``ssm.scan`` is a backend lookup, not a matmul site, and is excluded
+    by construction.)  The scanned whisper encoder unrolls under the
+    calibration policy, so its ``encoder.blocks.*`` sites record too —
+    one sample per site, hit once per encoder layer."""
     cfg = get_arch(arch).reduced()
     pp = transformer.init(cfg, jax.random.PRNGKey(0))
     params, _ = unzip(pp)
@@ -260,10 +261,13 @@ def test_every_lm_call_site_resolves_nonempty_full_path(arch):
     store = _recorded_paths(run, "bf16")
     assert "" not in store
     expected = {p for p in transformer.layer_paths(cfg)
-                if not p.endswith(".scan")
-                and not p.startswith("encoder.blocks.")}
+                if not p.endswith(".scan")}
     assert set(store) == expected, (
         sorted(expected - set(store)), sorted(set(store) - expected))
+    for p in expected:
+        if p.startswith("encoder.blocks."):
+            # unindexed path: every encoder layer hits the same site
+            assert store[p].calls == cfg.encoder_layers, (p, store[p].calls)
 
 
 def test_every_resnet_call_site_resolves_nonempty_full_path():

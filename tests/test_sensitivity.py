@@ -94,9 +94,16 @@ def test_local_error_orders_the_segmented_ladder(rng):
     ex = model.local_error("site", EXACT_F32)
     assert e1 > e2 > e3 > ex
     assert ex == pytest.approx(0.0, abs=1e-6)
-    # contributions and predictions compose linearly over sites
+    # the rms-flavoured ladder is monotone too
+    r1 = model.local_rms_error("site", SEG1)
+    assert r1 > model.local_rms_error("site", SEG2) > \
+        model.local_rms_error("site", SEG3)
+    # contributions and predictions compose linearly over sites, through
+    # the gain-aware formula tail * alpha * G * local_rms_error
+    assert model.contribution("site", SEG1) == pytest.approx(
+        model.tail * model.alpha["site"] * model.gain["site"] * r1)
     assert model.predict({"site": SEG1}) == pytest.approx(
-        model.baseline_error + model.alpha["site"] * e1)
+        model.baseline_error + model.contribution("site", SEG1))
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +211,162 @@ def test_proxy_raises_when_calibration_records_nothing(rng):
 
 
 # ---------------------------------------------------------------------------
+# gain coefficients: the JVP probe, its finite-difference fallback, and
+# the downstream chain composition
+# ---------------------------------------------------------------------------
+
+def test_probe_gain_fd_fallback_matches_jvp(rng):
+    """The site map is linear in x, so the finite-difference output
+    perturbation and the JVP probe must agree to rounding."""
+    x = np.asarray(rng.standard_normal((16, 12)), np.float32)
+    w = np.asarray(rng.standard_normal((12, 20)) * 0.6, np.float32)
+    g_jvp = sensitivity.probe_gain(x, w, method="jvp")
+    g_fd = sensitivity.probe_gain(x, w, method="fd")
+    assert g_jvp == pytest.approx(g_fd, rel=1e-4)
+    with pytest.raises(ValueError, match="unknown probe method"):
+        sensitivity.probe_gain(x, w, method="magic")
+
+
+def test_site_gain_tracks_map_amplification(rng):
+    """An amplifying weight matrix must show up in the recorded gain: the
+    probe measures what the map does to a random (error-like) direction,
+    scaling linearly with the weights."""
+    x = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    pol = sensitivity.calibration_policy(EXACT_F32)
+    with sensitivity.record_operands() as store:
+        nmatmul(x, w, pol, path="unit")
+        nmatmul(x, 10.0 * w, pol, path="loud")
+    assert store["loud"].gain == pytest.approx(10.0 * store["unit"].gain,
+                                               rel=1e-5)
+    assert store["unit"].in_rms == pytest.approx(
+        float(np.sqrt(np.mean(np.square(np.asarray(x))))), rel=1e-6)
+
+
+def test_downstream_gain_composes_along_chains_only(rng):
+    """Gains multiply along observed input-equals-previous-output chains;
+    a break in the chain (a site fed by something other than its
+    predecessor's output) resets the product to the unit-gain residual
+    assumption."""
+    x = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    w_amp = jnp.asarray(rng.standard_normal((8, 8)) * 2.0, jnp.float32)
+    pol = sensitivity.calibration_policy(EXACT_F32)
+    with sensitivity.record_operands() as store:
+        h = nmatmul(x, w_amp, pol, path="a").astype(jnp.float32)
+        h = nmatmul(h, w_amp, pol, path="b").astype(jnp.float32)
+        nmatmul(x, w_amp, pol, path="c")  # fed by x, NOT by b's output
+    assert store["b"].chained and not store["c"].chained
+    G = sensitivity.downstream_gains(store)
+    # a's error flows through b's map; the chain breaks at c
+    assert G["a"] == pytest.approx(store["b"].gain, rel=1e-6)
+    assert G["b"] == 1.0 and G["c"] == 1.0
+
+
+def test_chain_detection_survives_column_subsampling(rng):
+    """Chains must be detected at real network widths: the operand tap
+    samples <= MAX_COLS weight columns, so the probe compares the next
+    site's input in the PREVIOUS site's sampled column space — a
+    width-128 chain (wider than the 64-column sample) still chains."""
+    x = jnp.asarray(rng.standard_normal((16, 128)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((128, 128)) / 12.0, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((128, 128)) / 12.0, jnp.float32)
+    pol = sensitivity.calibration_policy(EXACT_F32)
+    with sensitivity.record_operands() as store:
+        h = nmatmul(x, w1, pol, path="a").astype(jnp.float32)
+        nmatmul(h, w2, pol, path="b")
+    assert store["a"].w.shape[1] == sensitivity.MAX_COLS  # really subsampled
+    assert store["b"].chained
+    G = sensitivity.downstream_gains(store)
+    assert G["a"] == pytest.approx(store["b"].gain, rel=1e-6)
+    # and a width change between sites (not a chain) stays unchained
+    with sensitivity.record_operands() as store2:
+        h = nmatmul(x, w1[:, :96], pol, path="a").astype(jnp.float32)
+        nmatmul(h[:, :80], w2[:80], pol, path="b")
+    assert not store2["b"].chained
+
+
+def test_chain_detection_survives_bf16_default(rng):
+    """The LM zoo calibrates under the exact-bf16 default, so the eager
+    pass's actual outputs carry bf16 operand rounding (~4e-3/element)
+    versus the tap's float64 reference product — the chain tolerance must
+    swallow that, or gain composition silently degrades to the flat
+    model exactly on the deep-stack path it exists to fix."""
+    bf16 = NumericsConfig(mode="exact")  # compute_dtype defaults bfloat16
+    x = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((32, 32)) / 5.0, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((32, 24)) / 5.0, jnp.float32)
+    pol = sensitivity.calibration_policy(bf16)
+    with sensitivity.record_operands() as store:
+        h = nmatmul(x, w1, pol, path="a").astype(jnp.float32)
+        nmatmul(h, w2, pol, path="b")
+    assert store["b"].chained
+    # and genuinely unrelated inputs (O(1) per-element differences) must
+    # still NOT chain under the loosened tolerance
+    with sensitivity.record_operands() as store2:
+        nmatmul(x, w1, pol, path="a")
+        nmatmul(jnp.asarray(rng.standard_normal((16, 32)), jnp.float32),
+                w1, pol, path="b")
+    assert not store2["b"].chained
+
+
+def test_contribution_weights_execution_multiplicity(rng):
+    """A site hit N times during the pass (the unrolled scanned encoder:
+    one unindexed path per N physical layers) injects its design error N
+    times — contribution must scale by ``calls``, or encoder budgets read
+    N-times too optimistic."""
+    x = jnp.asarray(rng.standard_normal((16, 12)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((12, 8)), jnp.float32)
+    pol = sensitivity.calibration_policy(EXACT_F32)
+    with sensitivity.record_operands() as once:
+        nmatmul(x, w, pol, path="site")
+    with sensitivity.record_operands() as thrice:
+        for _ in range(3):
+            nmatmul(x, w, pol, path="site")
+    m1 = sensitivity.SensitivityModel.from_store(once)
+    m3 = sensitivity.SensitivityModel.from_store(thrice)
+    assert m3.sites["site"].calls == 3
+    assert m3.contribution("site", SEG1) == pytest.approx(
+        3.0 * m1.contribution("site", SEG1))
+
+
+def test_gain_aware_prediction_tracks_amplifying_chain(rng):
+    """On a 2-layer chain whose second map amplifies ~4x (unnormalized
+    weights), the flat alpha-only composition under-predicts the measured
+    error by about that gain; the gain-aware prediction stays within a
+    small factor.  This is the ROADMAP's 'proxy under-predicts on deep
+    stacks' failure, reduced to its minimal case."""
+    from repro.core.metrics import mred
+
+    d = 16
+    x = jnp.asarray(rng.standard_normal((24, d)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((d, d)) / np.sqrt(d), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)  # gain ~sqrt(d)
+
+    def fwd(pol):
+        h = nmatmul(x, w1, pol, path="layer.0").astype(jnp.float32)
+        return nmatmul(h, w2, pol, path="layer.1").astype(jnp.float32)
+
+    model = sensitivity.calibrate(lambda p: (fwd(p), 0.0)[1],
+                                  default=EXACT_F32)
+    assert model.sites["layer.1"].chained
+    assert model.gain["layer.0"] == pytest.approx(
+        model.sites["layer.1"].gain, rel=1e-6)
+    assert model.sites["layer.1"].gain > 2.0  # the chain genuinely amplifies
+    assignment = {"layer.0": SEG1}  # error injected upstream only
+    pred = model.predict(assignment)
+    flat_pred = model.tail * model.alpha["layer.0"] * \
+        model.local_rms_error("layer.0", SEG1)  # same model, gain ablated
+    pol = NumericsPolicy.from_assignments(assignment, default=EXACT_F32)
+    ref = np.asarray(fwd(NumericsPolicy((), default=EXACT_F32)), np.float64)
+    measured = mred(np.asarray(fwd(pol), np.float64), ref)
+    # gain-aware brackets the measurement; the ablation shows the gain
+    # term is what closes the gap
+    assert measured <= 6.0 * pred and pred <= 32.0 * measured, (
+        pred, measured)
+    assert pred / flat_pred == pytest.approx(model.gain["layer.0"], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # golden fixtures: coefficients pinned against the independent numpy
 # reference (tests/golden/gen_policy_golden.py)
 # ---------------------------------------------------------------------------
@@ -219,9 +382,10 @@ def _sensitivity_golden():
 
 
 def test_sensitivity_coefficients_match_golden():
-    """alpha / out_rms / per-design local MRED / composed prediction all
-    match the independent numpy split-float reference bit-near (the only
-    wobble is f32 matmul accumulation order)."""
+    """alpha / out_rms / gains / chain flags / tail / per-design local
+    errors / composed prediction all match the independent numpy
+    split-float reference bit-near (the only wobble is f32 matmul
+    accumulation order)."""
     gold = _sensitivity_golden()
     pol = sensitivity.calibration_policy(EXACT_F32)
     with sensitivity.record_operands() as store:
@@ -232,13 +396,22 @@ def test_sensitivity_coefficients_match_golden():
     model = sensitivity.SensitivityModel.from_store(store)
     seg = {f"seg{p}": NumericsConfig(mode="segmented", seg_passes=p,
                                      backend="xla") for p in (1, 2, 3)}
+    assert model.tail == pytest.approx(gold["tail_factor"], rel=1e-6)
     for site in gold["sites"]:
         p = site["path"]
         assert model.sites[p].out_rms == pytest.approx(site["out_rms"],
                                                        rel=1e-6)
+        assert model.sites[p].chained == site["chained"]
+        assert model.sites[p].gain == pytest.approx(site["site_gain"],
+                                                    rel=1e-4)
         assert model.alpha[p] == pytest.approx(site["alpha"], rel=1e-6)
+        assert model.gain[p] == pytest.approx(site["downstream_gain"],
+                                              rel=1e-4)
         for tag, want in site["local_mred"].items():
             got = model.local_error(p, seg[tag])
+            assert got == pytest.approx(want, rel=1e-3), (p, tag, got, want)
+        for tag, want in site["local_rms"].items():
+            got = model.local_rms_error(p, seg[tag])
             assert got == pytest.approx(want, rel=1e-3), (p, tag, got, want)
     composed = model.predict(
         {p: seg[tag] for p, tag in gold["assignment"].items()})
@@ -304,6 +477,66 @@ def test_encoder_paths_carry_layer_multiplicity_via_counts():
     # decoder-only models need no counts
     assert transformer.layer_path_counts(
         get_arch("qwen3-4b").reduced()) == {}
+
+
+def test_calibration_records_scanned_encoder_sites():
+    """The scan blind spot, closed: the whisper-style encoder scans its
+    layers with one trace, which used to hide every ``encoder.blocks.*``
+    site from the eager calibration tap.  Under the calibration policy
+    the encoder unrolls, so one instrumented pass records each encoder
+    site with a non-empty ABSOLUTE path, hit once per encoder layer."""
+    from repro.configs import get_arch
+
+    cfg = get_arch("whisper-tiny").reduced()
+    cfg = dataclasses.replace(cfg, enc_len=16)
+    pp = transformer.init(cfg, jax.random.PRNGKey(0))
+    params, _ = unzip(pp)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)),
+                                   jnp.int32),
+             "enc_embeds": jnp.asarray(
+                 rng.standard_normal((1, 16, cfg.d_model)), jnp.float32)}
+
+    def eval_fn(policy):
+        pcfg = dataclasses.replace(cfg, numerics=policy)
+        h, _, _ = transformer.backbone(params, pcfg, batch, mode="train")
+        transformer.logits_fn(params, pcfg, h)
+        return 0.0
+
+    model = sensitivity.calibrate(eval_fn, default=NumericsConfig(mode="exact"))
+    enc_sites = {p for p in model.sites if p.startswith("encoder.blocks.")}
+    expected = {p for p in transformer.layer_paths(cfg)
+                if p.startswith("encoder.blocks.")}
+    assert enc_sites == expected and expected, sorted(model.sites)
+    for p in enc_sites:
+        assert model.sites[p].calls == cfg.encoder_layers
+        assert model.alpha[p] > 0
+    # and the proxy can now assign encoder sites under a budget
+    paths = transformer.layer_paths(cfg)
+    res = sweep.auto_configure(eval_fn, paths, 1e6,
+                               candidates=CANDIDATES, method="proxy",
+                               default=NumericsConfig(mode="exact"))
+    assert any(p.startswith("encoder.blocks.") for p, _ in res.assignments)
+    # area accounting counts one multiplier instance per physical encoder
+    # layer (calls multiplicity), matching the calls-weighted contribution
+    exact_area = sweep.config_ppa(NumericsConfig(mode="exact")).logic_area_um2
+    n_enc = sum(1 for p in paths if p.startswith("encoder.blocks."))
+    assert res.baseline_area_um2 == pytest.approx(
+        exact_area * (len(paths) + (cfg.encoder_layers - 1) * n_enc))
+
+
+@pytest.mark.slow
+def test_session_auto_configure_whisper_covers_encoder():
+    """Session.auto_configure on an encoder-decoder arch builds its own
+    calibration batch (tokens + enc_embeds) and emits a policy whose
+    rules cover the ``encoder.blocks.*`` sites."""
+    from repro.session import Session
+
+    sess = Session("whisper-tiny")
+    res = sess.auto_configure(budget=1e6, method="proxy")
+    assert res.n_evals == 1
+    assert any(p.startswith("encoder.blocks.") for p, _ in res.assignments), \
+        res.assignments
 
 
 @pytest.mark.slow

@@ -1,19 +1,27 @@
 #!/usr/bin/env python
-"""Docs checker: intra-repo markdown link validation + fenced-example compilation.
+"""Docs checker: link + anchor validation, fenced-example compilation,
+and the generated-CLI-reference sync check.
 
-Two failure modes this guards against as the APIs evolve:
+Four failure modes this guards against as the APIs evolve:
 
 1. broken intra-repo links — every relative ``[text](target)`` in the
-   checked markdown files must point at an existing file (``#anchor``
-   fragments are stripped; external ``http(s)://`` / ``mailto:`` links
-   are skipped);
-2. stale code examples — every fenced ```` ```python ```` block in
+   checked markdown files must point at an existing file (external
+   ``http(s)://`` / ``mailto:`` links are skipped);
+2. broken anchor fragments — a ``file.md#section`` (or in-page
+   ``#section``) link must name a real heading of the target file, using
+   GitHub's slug rules, so renaming a heading can no longer break links
+   silently;
+3. stale code examples — every fenced ```` ```python ```` block in
    ``docs/`` is extracted and byte-compiled (``python -m compileall``
-   semantics via :func:`compile`), so syntax drift in examples fails CI.
+   semantics via :func:`compile`), so syntax drift in examples fails CI;
+4. stale generated CLI reference — ``docs/cli.md`` must match what
+   ``tools/gen_cli_docs.py`` renders from the live
+   ``python -m repro.session`` parser (skippable with
+   ``--skip-cli-sync`` for environments without jax).
 
-Usage: ``python tools/check_docs.py [--write-extracted DIR]``; exits
-non-zero on any problem.  Run by the ``docs`` job in
-``.github/workflows/ci.yml`` and by ``tests/test_docs.py``.
+Usage: ``python tools/check_docs.py [--write-extracted DIR]
+[--skip-cli-sync]``; exits non-zero on any problem.  Run by the ``docs``
+job in ``.github/workflows/ci.yml`` and by ``tests/test_docs.py``.
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ DOCS_DIR = REPO / "docs"
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.MULTILINE)
 _EXTERNAL = ("http://", "https://", "mailto:")
 
 
@@ -46,20 +55,55 @@ def _md_files() -> list[Path]:
     return files
 
 
-def check_links(md: Path) -> list[str]:
+def _strip_fences(text: str) -> str:
+    # code fences hold command examples and literal '#' lines, not
+    # references/headings
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style heading slug: drop markup, lowercase, strip anything
+    but word chars/spaces/hyphens, spaces -> hyphens."""
+    text = heading.strip().lower()
+    text = text.replace("`", "")
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # [text](url) -> text
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_anchors(md: Path) -> set[str]:
+    """All anchor fragments the file's headings define (duplicate headings
+    get GitHub's ``-1``, ``-2`` suffixes)."""
+    seen: dict[str, int] = {}
+    out: set[str] = set()
+    for m in _HEADING_RE.finditer(_strip_fences(md.read_text())):
+        slug = _slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_links(md: Path, _anchor_cache: dict | None = None) -> list[str]:
     problems = []
-    text = md.read_text()
-    # ignore links inside code fences (command examples, not references)
-    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    anchors = _anchor_cache if _anchor_cache is not None else {}
+    text = _strip_fences(md.read_text())
     for target in _LINK_RE.findall(text):
         if target.startswith(_EXTERNAL):
             continue
-        path = target.split("#", 1)[0]
-        if not path:  # pure in-page anchor
-            continue
-        resolved = (md.parent / path).resolve()
+        path, _, fragment = target.partition("#")
+        resolved = (md.parent / path).resolve() if path else md
         if not resolved.exists():
             problems.append(f"{_label(md)}: broken link -> {target}")
+            continue
+        if fragment and resolved.suffix == ".md":
+            if resolved not in anchors:
+                anchors[resolved] = heading_anchors(resolved)
+            if fragment not in anchors[resolved]:
+                problems.append(
+                    f"{_label(md)}: broken anchor -> {target} "
+                    f"(no heading slugs to '#{fragment}' in "
+                    f"{_label(resolved)})")
     return problems
 
 
@@ -77,11 +121,39 @@ def check_fences(md: Path, write_dir: Path | None = None) -> list[str]:
     return problems
 
 
+def check_cli_sync() -> list[str]:
+    """``docs/cli.md`` must match the live parser (tools/gen_cli_docs.py)."""
+    tools_entry = str(REPO / "tools")
+    sys.path.insert(0, tools_entry)
+    try:
+        import gen_cli_docs
+        want = gen_cli_docs.render()
+    except ImportError as e:
+        # rendering imports repro.session, which needs jax — report a
+        # structured failure instead of a traceback so the link/anchor
+        # results above still land
+        return [f"docs/cli.md sync check could not import the CLI ({e}); "
+                f"install runtime deps or pass --skip-cli-sync"]
+    finally:
+        # remove the exact entry we added — render() may itself have
+        # inserted REPO/src at index 0, which a blind pop(0) would evict
+        sys.path.remove(tools_entry)
+    have = gen_cli_docs.OUT.read_text() if gen_cli_docs.OUT.exists() else ""
+    if want != have:
+        return ["docs/cli.md is out of sync with the repro.session parser "
+                "— regenerate with: PYTHONPATH=src python "
+                "tools/gen_cli_docs.py"]
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--write-extracted", metavar="DIR", default=None,
                     help="also write extracted fences as .py files here "
                          "(for python -m compileall)")
+    ap.add_argument("--skip-cli-sync", action="store_true",
+                    help="skip the docs/cli.md generated-reference check "
+                         "(it imports repro.session, which needs jax)")
     args = ap.parse_args(argv)
     write_dir = None
     if args.write_extracted:
@@ -89,19 +161,23 @@ def main(argv=None) -> int:
         write_dir.mkdir(parents=True, exist_ok=True)
 
     problems = []
+    anchor_cache: dict = {}
     n_links = n_fences = 0
     for md in _md_files():
-        link_problems = check_links(md)
-        problems += link_problems
+        problems += check_links(md, anchor_cache)
         n_links += 1
         if str(md).startswith(str(DOCS_DIR)):
             problems += check_fences(md, write_dir)
             n_fences += 1
+    if not args.skip_cli_sync:
+        problems += check_cli_sync()
 
     for p in problems:
         print(f"FAIL {p}", file=sys.stderr)
-    print(f"check_docs: {n_links} files link-checked, "
-          f"{n_fences} docs files fence-compiled, {len(problems)} problem(s)")
+    print(f"check_docs: {n_links} files link+anchor-checked, "
+          f"{n_fences} docs files fence-compiled, "
+          f"cli-sync {'skipped' if args.skip_cli_sync else 'checked'}, "
+          f"{len(problems)} problem(s)")
     return 1 if problems else 0
 
 

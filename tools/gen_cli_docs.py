@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Generate ``docs/cli.md`` from the ``python -m repro.session`` parser.
+
+The unified Session CLI is the repo's one command-line surface (serve,
+dryrun and the benchmark drivers are thin wrappers over it).  This tool
+introspects :func:`repro.session.build_parser` and writes the top-level
+help plus every subcommand's help into ``docs/cli.md``, so the committed
+reference can never drift from the argparse truth: ``tools/check_docs.py``
+re-renders it and fails when the committed file is out of sync (the CI
+docs job runs that check).
+
+Usage:
+
+    PYTHONPATH=src python tools/gen_cli_docs.py          # rewrite docs/cli.md
+    PYTHONPATH=src python tools/gen_cli_docs.py --check  # verify, exit 1 on drift
+
+(The src path is added automatically when PYTHONPATH is unset.)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+OUT = REPO / "docs" / "cli.md"
+
+HEADER = """\
+# CLI reference — `python -m repro.session`
+
+<!-- GENERATED FILE: do not edit by hand.
+     Regenerate with:  PYTHONPATH=src python tools/gen_cli_docs.py
+     tools/check_docs.py (and the CI docs job) fail when this file is
+     out of sync with the argparse definitions in src/repro/session.py. -->
+
+One (arch, policy, backend) spec drives every entry point
+([architecture.md](architecture.md)); the subcommands below are the
+public command-line surface.  `repro.launch.serve`,
+`repro.launch.dryrun` and `benchmarks/table4_resnet.py` are thin
+wrappers over the same `Session` facade.  Policy files come from
+[numerics_policy.md](numerics_policy.md); the proxy auto-configurer
+behind `auto-configure` is documented in
+[sensitivity.md](sensitivity.md).
+"""
+
+
+def _subparsers(ap: argparse.ArgumentParser):
+    for action in ap._actions:
+        if isinstance(action, argparse._SubParsersAction):
+            # dict name -> subparser, insertion-ordered
+            return action.choices
+    return {}
+
+
+def render() -> str:
+    """The full docs/cli.md content (deterministic: fixed help width)."""
+    if str(REPO / "src") not in sys.path and "repro" not in sys.modules:
+        sys.path.insert(0, str(REPO / "src"))
+    from repro.session import build_parser
+
+    # argparse wraps help text to the terminal width; pin it so the
+    # generated file is identical everywhere (laptops, CI runners) —
+    # and restore it, render() runs in-process under pytest/check_docs
+    prev = os.environ.get("COLUMNS")
+    os.environ["COLUMNS"] = "80"
+    try:
+        ap = build_parser()
+        parts = [HEADER, "\n## repro.session\n\n```text\n",
+                 ap.format_help().rstrip(), "\n```\n"]
+        for name, sub in _subparsers(ap).items():
+            parts += [f"\n## repro.session {name}\n\n```text\n",
+                      sub.format_help().rstrip(), "\n```\n"]
+    finally:
+        if prev is None:
+            os.environ.pop("COLUMNS", None)
+        else:
+            os.environ["COLUMNS"] = prev
+    return "".join(parts)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--check", action="store_true",
+                   help="verify docs/cli.md is in sync instead of writing it")
+    args = p.parse_args(argv)
+    text = render()
+    if args.check:
+        committed = OUT.read_text() if OUT.exists() else ""
+        if committed != text:
+            print("FAIL docs/cli.md is out of sync with repro.session's "
+                  "parser — regenerate with: PYTHONPATH=src python "
+                  "tools/gen_cli_docs.py", file=sys.stderr)
+            return 1
+        print("gen_cli_docs: docs/cli.md is in sync")
+        return 0
+    OUT.write_text(text)
+    print(f"gen_cli_docs: wrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
