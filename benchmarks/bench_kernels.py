@@ -15,7 +15,7 @@ from repro.kernels import ops
 
 
 def _time(fn, *args, iters=5):
-    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") else None
+    jax.block_until_ready(fn(*args))  # one warmup call (compile excluded)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
