@@ -83,10 +83,36 @@ def ssd_scan_ref(x, dt, A, B, C, chunk: int = 64):
     return y
 
 
+def chunk_decay(dt, A, chunk: int):
+    """Per-chunk log cumulative decay ``l[t] = A_h * cumsum(dt)[t]`` (the
+    cumsum restarting at every chunk boundary).
+
+    Hoisted out of both SSD execution paths on purpose: computed *inside*
+    a fused kernel/scan body, ``A * cumsum(dt)`` is subject to
+    fusion-context-dependent FP contraction (the compiler may emit
+    ``fma(A, cs_t, -A*cs_s)`` for ``l_t - l_s`` in one lowering and two
+    rounded multiplies in another), which made interpret-vs-xla agreement
+    shape-dependent at small chunks.  Computing the decay once, behind a
+    materialization boundary, pins its bits so both paths consume
+    identical values.
+
+    dt: (L, H), A: (H,) -> l: (L, H); L must be a multiple of ``chunk``.
+    """
+    L, H = dt.shape
+    assert L % chunk == 0, (L, chunk)
+    dtc = dt.astype(jnp.float32).reshape(L // chunk, chunk, H)
+    l = A.astype(jnp.float32)[None, None, :] * jnp.cumsum(dtc, axis=1)
+    return l.reshape(L, H)
+
+
 def ssd_scan_chunked_ref(x, dt, A, B, C, chunk: int = 128):
     """Chunked SSD in pure jnp — the same math/FLOP structure as the Pallas
     kernel (used as the CPU/XLA execution path so dry-run cost analysis
-    reflects the chunked algorithm, and as a second oracle in tests)."""
+    reflects the chunked algorithm, and as a second oracle in tests).
+
+    Bit-exact with the interpret-mode Pallas kernel: both consume the
+    same hoisted :func:`chunk_decay` and do the same per-chunk dots.
+    """
     L, H, P = x.shape
     N = B.shape[-1]
     Q = min(chunk, L)
@@ -94,19 +120,19 @@ def ssd_scan_chunked_ref(x, dt, A, B, C, chunk: int = 128):
     nc = L // Q
     x = x.astype(jnp.float32)
     dt = dt.astype(jnp.float32)
-    A = A.astype(jnp.float32)
+    lfull = chunk_decay(dt, A, Q)
     Bc = B.astype(jnp.float32).reshape(nc, Q, N)
     Cc = C.astype(jnp.float32).reshape(nc, Q, N)
     t_idx = jnp.arange(Q)[:, None]
     s_idx = jnp.arange(Q)[None, :]
 
-    def head(xh, dth, Ah):
+    def head(xh, dth, lh):
         xc = xh.reshape(nc, Q, P)
         dtc = dth.reshape(nc, Q)
+        lc = lh.reshape(nc, Q)
 
         def chunk_body(S, inp):
-            xq, dq, Bq, Cq = inp
-            l = Ah * jnp.cumsum(dq)
+            xq, dq, l, Bq, Cq = inp
             CB = Cq @ Bq.T
             # clamp: only t>=s is used, where l_t - l_s <= 0; the clamp keeps
             # the masked upper triangle finite (inf would NaN the where-grad)
@@ -118,7 +144,7 @@ def ssd_scan_chunked_ref(x, dt, A, B, C, chunk: int = 128):
             return S_new, y
 
         S0 = jnp.zeros((N, P), jnp.float32)
-        _, ys = jax.lax.scan(chunk_body, S0, (xc, dtc, Bc, Cc))
+        _, ys = jax.lax.scan(chunk_body, S0, (xc, dtc, lc, Bc, Cc))
         return ys.reshape(L, P)
 
-    return jax.vmap(head, in_axes=(1, 1, 0), out_axes=1)(x, dt, A)
+    return jax.vmap(head, in_axes=(1, 1, 1), out_axes=1)(x, dt, lfull)

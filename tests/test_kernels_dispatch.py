@@ -178,8 +178,13 @@ def test_bitwise_interpret_bitwise_equals_xla(shape, rng):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@pytest.mark.parametrize("dims", [(64, 2, 16, 8, 16), (96, 3, 8, 4, 32)])
+@pytest.mark.parametrize("dims", [(64, 2, 16, 8, 16), (96, 3, 8, 4, 32),
+                                  (128, 4, 32, 16, 32), (256, 4, 16, 8, 64)])
 def test_ssd_interpret_bitwise_equals_xla(dims, rng):
+    """Bit-exact, not merely ulp-close: both paths consume the hoisted
+    ref.chunk_decay, so no fusion-context FP contraction can diverge them.
+    chunk=16 is the regression shape — computed in-kernel, A*cumsum(dt) was
+    contracted differently there and drifted by hundreds of ulp."""
     L, H, P, N, chunk = dims
     x = jnp.asarray(rng.standard_normal((L, H, P)), jnp.float32)
     dt = jnp.asarray(rng.uniform(0.01, 0.2, (L, H)), jnp.float32)
@@ -188,10 +193,22 @@ def test_ssd_interpret_bitwise_equals_xla(dims, rng):
     C = jnp.asarray(rng.standard_normal((L, N)), jnp.float32)
     got = dispatch.ssd(x, dt, A, B, C, chunk=chunk, backend="interpret")
     want = dispatch.ssd(x, dt, A, B, C, chunk=chunk, backend="xla")
-    # same chunked math, but the ref's vmap over heads lets XLA pick a
-    # different dot reduction strategy at some shapes -> 1-ulp wobble
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ssd_interpret_equals_xla_under_jit(rng):
+    """The bit-exactness guarantee must survive jit (the production entry
+    point ops.ssd_scan is jitted): the hoisted decay sits behind a
+    materialization boundary in both compiled programs."""
+    L, H, P, N, chunk = 64, 2, 16, 8, 16
+    x = jnp.asarray(rng.standard_normal((L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (L, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((L, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((L, N)), jnp.float32)
+    got = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, backend="interpret")
+    want = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_ops_batched_matmul_native_grid(rng):
