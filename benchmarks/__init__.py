@@ -1,0 +1,20 @@
+"""Benchmark package: paper tables, kernel microbench, roofline, perf CI.
+
+Canonical invocation (from the repo root, any extra PYTHONPATH optional):
+
+    python -m benchmarks.run [--json [PATH]] [--fast] [--skip-resnet]
+
+Importing this package makes ``src/repro`` importable on its own, so the
+``PYTHONPATH=src`` prefix the test suite uses is not required for the
+benchmark entry points; from outside the repo root, put the repo root on
+``PYTHONPATH`` so ``-m benchmarks.run`` resolves.
+"""
+import os
+import sys
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+try:
+    import repro  # noqa: F401
+except ImportError:  # pragma: no cover - depends on caller's PYTHONPATH
+    if _SRC not in sys.path:
+        sys.path.insert(0, _SRC)

@@ -1,71 +1,80 @@
 """Kernel micro-benchmarks: segmented matmul (XLA path timed on CPU; the
 Pallas path is the TPU target, validated in interpret mode) + bit-level
-multiplier throughput + SSD scan."""
-from __future__ import annotations
+multiplier throughput + SSD scan.
 
-import time
+All timing goes through ``benchmarks.harness`` (warmup excluded, every
+iteration synced, median-of-k).  The ``seg_matmul_pN_vs_exact`` ratios are
+the hardware-portable gate metrics of the perf trajectory; absolute µs are
+informational (see docs/benchmarks.md).
+"""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from .harness import BenchReport
+except ImportError:  # run as a script: python benchmarks/<module>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.harness import BenchReport
 from repro.core.afpm import AFPMConfig
 from repro.core.numerics import segmented_matmul_xla
 from repro.kernels import ops
 
 
-def _time(fn, *args, iters=5):
-    jax.block_until_ready(fn(*args))  # one warmup call (compile excluded)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
 
-
-def run(csv_rows=None):
+def run(report: BenchReport | None = None):
+    report = report if report is not None else BenchReport()
     print("\n== kernel micro-benchmarks (CPU host; Pallas = TPU target) ==")
     rng = np.random.default_rng(0)
-    M = K = N = 512
+    M = K = N = 256 if report.fast else 512
     x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    dims = f"{M}x{K}x{N}"
 
     exact = jax.jit(lambda a, b: a @ b)
-    us_exact = _time(exact, x, w)
-    print(f"{'exact fp32 512^3':28s} {us_exact:10.1f} us")
-    if csv_rows is not None:
-        csv_rows.append(("kern_exact_matmul", us_exact, "512x512x512"))
+    us_exact = report.record("kern_exact_matmul", exact, x, w,
+                             derived={"dims": dims}).median_us
+    print(f"{'exact fp32 ' + dims:28s} {us_exact:10.1f} us")
 
     for p in (1, 2, 3):
         f = jax.jit(lambda a, b, p=p: segmented_matmul_xla(a, b, p))
-        us = _time(f, x, w)
+        us = report.record(f"kern_seg_matmul_p{p}", f, x, w,
+                           derived={"dims": dims}).median_us
+        ratio = us / us_exact
         print(f"{'segmented matmul passes=' + str(p):28s} {us:10.1f} us "
-              f"({us / us_exact:.2f}x exact)")
-        if csv_rows is not None:
-            csv_rows.append((f"kern_seg_matmul_p{p}", us, f"ratio={us/us_exact:.2f}"))
+              f"({ratio:.2f}x exact)")
+        # the stable, hardware-portable gate metric: overhead vs the exact
+        # matmul measured in the same process on the same operands
+        report.add(f"kern_seg_matmul_p{p}_vs_exact", ratio, "ratio",
+                   derived={"dims": dims})
 
-    xe = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
-    ye = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
+    n_elems = 1 << (14 if report.fast else 16)
+    xe = jnp.asarray(rng.standard_normal(n_elems), jnp.float32)
+    ye = jnp.asarray(rng.standard_normal(n_elems), jnp.float32)
     for label, cfg in [("AC5-5", AFPMConfig(n=5)), ("ACL5", AFPMConfig(n=5, mode="acl"))]:
         f = jax.jit(lambda a, b, c=cfg: ops.afpm_multiply(a, b, c, backend="xla"))
-        us = _time(f, xe, ye)
-        rate = (1 << 16) / (us / 1e6) / 1e6
-        print(f"{'bitlevel ' + label + ' 65536 elems':28s} {us:10.1f} us "
+        us = report.record(f"kern_bitlevel_{label}", f, xe, ye,
+                           derived={"n_elems": n_elems}).median_us
+        rate = n_elems / (us / 1e6) / 1e6
+        print(f"{'bitlevel ' + label + f' {n_elems} elems':28s} {us:10.1f} us "
               f"({rate:.0f} Mmul/s)")
-        if csv_rows is not None:
-            csv_rows.append((f"kern_bitlevel_{label}", us, f"Mmul_s={rate:.0f}"))
 
-    L, H, P, Nst = 1024, 4, 32, 16
+    L, H, P, Nst = (512 if report.fast else 1024), 4, 32, 16
     xs = jnp.asarray(rng.standard_normal((L, H, P)), jnp.float32)
     dt = jnp.asarray(rng.uniform(0.01, 0.2, (L, H)), jnp.float32)
     A = jnp.asarray(-rng.uniform(0.5, 2, (H,)), jnp.float32)
     B = jnp.asarray(rng.standard_normal((L, Nst)), jnp.float32)
     C = jnp.asarray(rng.standard_normal((L, Nst)), jnp.float32)
     f = jax.jit(lambda *a: ops.ssd_scan(*a, backend="xla"))
-    us = _time(f, xs, dt, A, B, C)
-    print(f"{'ssd_scan 1024x4x32 (chunked)':28s} {us:10.1f} us")
-    if csv_rows is not None:
-        csv_rows.append(("kern_ssd_scan", us, f"L={L}"))
+    us = report.record("kern_ssd_scan", f, xs, dt, A, B, C,
+                       derived={"L": L, "H": H, "P": P}).median_us
+    print(f"{'ssd_scan %dx%dx%d (chunked)' % (L, H, P):28s} {us:10.1f} us")
+    return report
 
 
 if __name__ == "__main__":

@@ -1,0 +1,155 @@
+"""Shared timing core for every benchmark module (the perf trajectory).
+
+One measurement contract, used by all of ``bench_kernels`` /
+``table2_ppa`` / ``table3_image`` / ``table4_resnet`` / ``roofline``
+instead of five hand-rolled ``time.perf_counter()`` loops:
+
+- warmup calls (compilation) run first and are excluded from timing;
+- every timed iteration is synced with ``jax.block_until_ready`` on the
+  result pytree, so async dispatch can never be timed as "done";
+- the reported value is the median of k iterations, with dispersion
+  (IQR, min, max) kept alongside so noisy runs are visible in the
+  artifact instead of silently averaged away.
+
+:class:`BenchReport` collects named metrics as ``{value, unit, derived,
+meta}`` entries plus device/backend/jax-version metadata and serializes
+them to the versioned ``BENCH_*.json`` schema that
+``tools/check_bench.py`` diffs against the committed trajectory (see
+``docs/benchmarks.md`` for the schema and tolerance-band policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import socket
+import statistics
+import time
+
+import jax
+
+#: Versioned schema tag written into every artifact; ``tools/check_bench.py``
+#: refuses to compare artifacts whose tag does not match its own.
+SCHEMA = "repro-bench/1"
+
+#: Units whose values are stable across hosts (ratios of co-measured
+#: timings, deterministic model outputs, accuracy metrics) — these gate
+#: the perf trajectory.  Everything else ("us", "Mmul/s", ...) is
+#: informational: recorded, diffed, but never a CI failure on shared CPU
+#: runners.  Tolerances are relative bands; per-metric overrides live in
+#: ``tools/check_bench.py``.
+GATED_UNITS = {
+    "ratio": 0.50,     # timing ratios (e.g. seg_matmul_pN / exact)
+    "dB": 0.05,        # PSNR accuracy metrics
+    "um2": 0.005,      # analytical PPA model outputs (deterministic)
+    "W": 0.005,
+    "percent": 0.25,   # model-vs-paper deviation summaries
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """Median-of-k wall-clock timing with dispersion."""
+
+    median_us: float
+    iqr_us: float
+    min_us: float
+    max_us: float
+    iters: int
+    warmup: int
+
+    @property
+    def rel_iqr(self) -> float:
+        return self.iqr_us / self.median_us if self.median_us else 0.0
+
+    def stats(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def measure(fn, *args, iters: int = 5, warmup: int = 1) -> Measurement:
+    """Time ``fn(*args)``: ``warmup`` untimed calls, then ``iters`` timed
+    iterations, each synced through ``jax.block_until_ready`` (which walks
+    the result pytree and passes non-array leaves through untouched)."""
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    if len(samples) >= 2:
+        q = statistics.quantiles(samples, n=4)
+        iqr = q[2] - q[0]
+    else:
+        iqr = 0.0
+    return Measurement(median_us=statistics.median(samples), iqr_us=iqr,
+                       min_us=samples[0], max_us=samples[-1],
+                       iters=iters, warmup=warmup)
+
+
+def environment_meta() -> dict:
+    """Host/device/version context stamped into every artifact."""
+    devices = jax.devices()
+    return {
+        "host": socket.gethostname(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device": devices[0].device_kind if devices else "none",
+        "device_count": len(devices),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+class BenchReport:
+    """Collector every benchmark module writes into.
+
+    ``fast`` trims iteration counts (and lets modules trim problem sizes)
+    for the CI subset; the artifact records which mode produced it so a
+    fast run is never diffed against a full baseline unnoticed.
+    """
+
+    def __init__(self, *, fast: bool = False, iters: int | None = None):
+        self.fast = fast
+        self.default_iters = iters if iters is not None else (3 if fast else 5)
+        self.meta = environment_meta()
+        self.meta["fast"] = fast
+        self.metrics: dict[str, dict] = {}
+
+    def add(self, name: str, value: float, unit: str, *,
+            derived: dict | None = None, meta: dict | None = None) -> None:
+        if name in self.metrics:
+            raise ValueError(f"duplicate metric {name!r}")
+        self.metrics[name] = {
+            "value": float(value),
+            "unit": unit,
+            "derived": derived or {},
+            "meta": meta or {},
+        }
+
+    def record(self, name: str, fn, *args, derived: dict | None = None,
+               iters: int | None = None, warmup: int = 1) -> Measurement:
+        """Measure ``fn(*args)`` and add it as a ``us`` metric."""
+        m = measure(fn, *args, iters=iters or self.default_iters,
+                    warmup=warmup)
+        self.add(name, m.median_us, "us", derived=derived, meta=m.stats())
+        return m
+
+    def to_dict(self) -> dict:
+        return {"schema": SCHEMA, "meta": self.meta, "metrics": self.metrics}
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    def csv_rows(self):
+        """Legacy ``name,value,derived`` summary rows (stdout contract)."""
+        for name, m in self.metrics.items():
+            derived = ";".join(f"{k}={v}" for k, v in m["derived"].items())
+            yield name, m["value"], m["unit"], derived

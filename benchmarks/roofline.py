@@ -11,6 +11,15 @@ import glob
 import json
 import os
 
+try:
+    from .harness import BenchReport
+except ImportError:  # run as a script: python benchmarks/<module>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.harness import BenchReport
+
 ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
 
 
@@ -39,7 +48,8 @@ def _row(r):
     )
 
 
-def run(csv_rows=None, mesh: str = "16x16"):
+def run(report: BenchReport | None = None, mesh: str = "16x16"):
+    report = report if report is not None else BenchReport()
     recs = load_records(mesh)
     print(f"\n== Roofline ({mesh}; v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI) ==")
     hdr = (f"{'arch':26s} {'shape':12s} {'stat':6s} {'t_comp':>8s} {'t_mem':>8s} "
@@ -54,10 +64,13 @@ def run(csv_rows=None, mesh: str = "16x16"):
               f"{row['t_c']:8.3f} {row['t_m']:8.3f} {row['t_x']:8.3f} "
               f"{row['dom'][:6]:>6s} {row['useful']:7.3f} {row['frac']:6.3f} "
               f"{row['gib']:6.1f}")
-        if csv_rows is not None:
-            csv_rows.append((f"roofline_{row['arch']}_{row['shape']}",
-                             max(row['t_c'], row['t_m'], row['t_x']) * 1e6,
-                             f"dom={row['dom']};frac={row['frac']:.3f}"))
+        # modeled step time from the dry-run artifacts (no live timing
+        # here, so the dispersion fields do not apply): informational us,
+        # with the dimensionless roofline fraction in derived
+        report.add(f"roofline_{mesh}_{row['arch']}_{row['shape']}",
+                   max(row['t_c'], row['t_m'], row['t_x']) * 1e6, "us",
+                   derived={"dom": row["dom"], "frac": round(row["frac"], 3)})
+    return report
 
 
 def markdown_table(mesh: str = "16x16") -> str:

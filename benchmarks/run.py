@@ -1,33 +1,66 @@
 """Benchmark driver — one section per paper table + kernels + roofline.
 
-Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+Canonical invocation (from the repo root; ``benchmarks/__init__.py`` makes
+``src/repro`` importable on its own):
+
+    python -m benchmarks.run [--json [PATH]] [--fast] [--skip-resnet]
+
+``--json`` writes the versioned ``BENCH_*.json`` perf-trajectory artifact
+(default path ``BENCH_<host>.json``); ``tools/check_bench.py`` diffs it
+against the committed baseline.  A ``name,value,unit,derived`` CSV summary
+is printed at the end (legacy stdout contract).
 """
 import argparse
+import os
+import socket
 import sys
 
+if __package__ in (None, ""):  # executed as a script: python benchmarks/run.py
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="run the benchmark suite and (optionally) emit the "
+                    "BENCH_*.json perf-trajectory artifact")
     ap.add_argument("--skip-resnet", action="store_true",
                     help="skip the (slow) Table IV ResNet benchmark")
     ap.add_argument("--resnet-steps", type=int, default=120)
-    args = ap.parse_args()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI subset: fewer timing iterations and smaller "
+                         "problem sizes (recorded in the artifact meta)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="override the per-metric timing iteration count")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write the BENCH_*.json artifact here "
+                         "(default: BENCH_<host>.json in the cwd)")
+    args = ap.parse_args(argv)
 
-    csv_rows = []
     from benchmarks import bench_kernels, roofline, table2_ppa, table3_image
+    from benchmarks.harness import BenchReport
 
-    table2_ppa.run(csv_rows)
-    table3_image.run(csv_rows)
-    bench_kernels.run(csv_rows)
-    roofline.run(csv_rows)
+    report = BenchReport(fast=args.fast, iters=args.iters)
+    table2_ppa.run(report)
+    table3_image.run(report)
+    bench_kernels.run(report)
+    roofline.run(report)
     if not args.skip_resnet:
         from benchmarks import table4_resnet
 
-        table4_resnet.run(csv_rows, train_steps=args.resnet_steps)
+        table4_resnet.run(report, train_steps=args.resnet_steps)
 
-    print("\nname,us_per_call,derived")
-    for name, us, derived in csv_rows:
-        print(f"{name},{us:.1f},{derived}")
+    print("\nname,value,unit,derived")
+    for name, value, unit, derived in report.csv_rows():
+        print(f"{name},{value:.1f},{unit},{derived}")
+
+    if args.json is not None:
+        path = args.json or f"BENCH_{socket.gethostname()}.json"
+        report.write(path)
+        print(f"\n[bench] wrote {path} ({len(report.metrics)} metrics, "
+              f"schema {report.to_dict()['schema']}); gate with: "
+              f"python tools/check_bench.py --baseline "
+              f"benchmarks/BENCH_cpu_ci.json {path}")
 
 
 if __name__ == "__main__":

@@ -4,23 +4,33 @@ Prints predicted logic area / power / delay per multiplier configuration
 next to the paper's published values, with per-row deviation.  The model is
 calibrated on TWO rows only (Exact and AC5-5); every other row is a
 prediction (see repro/core/ppa.py).
+
+Metrics: the model outputs (area/power savings, mean deviation vs paper)
+are deterministic and gate the trajectory; the model-evaluation wall-clock
+is informational (see docs/benchmarks.md).
 """
 from __future__ import annotations
 
-import time
+try:
+    from .harness import BenchReport
+except ImportError:  # run as a script: python benchmarks/<module>.py
+    import os
+    import sys
 
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.harness import BenchReport
 from repro.core import ppa
 
 
-def run(csv_rows=None):
+
+def run(report: BenchReport | None = None):
+    report = report if report is not None else BenchReport()
     print("\n== Table II: post-layout PPA (64x32 SRAM, analytical model) ==")
     print(f"{'design':8s} {'area um2':>9s} {'paper':>7s} {'err%':>6s} "
           f"{'power W':>9s} {'paper':>9s} {'err%':>6s} {'delay ns':>8s}")
     errs_a, errs_p = [], []
     for name, (kind, kw) in ppa.TABLE2_SPECS.items():
-        t0 = time.perf_counter()
         est = ppa.estimate(kind, name=name, **kw)
-        dt = (time.perf_counter() - t0) * 1e6
         pa, pp_ = ppa.PAPER_TABLE2_64x32[name]
         ea = 100 * (est.logic_area_um2 - pa) / pa
         ep = 100 * (est.power_w - pp_) / pp_
@@ -28,22 +38,44 @@ def run(csv_rows=None):
         errs_p.append(abs(ep))
         print(f"{name:8s} {est.logic_area_um2:9.0f} {pa:7.0f} {ea:6.1f} "
               f"{est.power_w:9.2e} {pp_:9.2e} {ep:6.1f} {est.delay_ns:8.2f}")
-        if csv_rows is not None:
-            csv_rows.append((f"table2_{name}", dt,
-                             f"area={est.logic_area_um2:.0f};power={est.power_w:.3e}"))
-    print(f"mean |err|: area {sum(errs_a)/len(errs_a):.1f}%  "
-          f"power {sum(errs_p)/len(errs_p):.1f}%")
+        report.add(f"table2_{name}_area", est.logic_area_um2, "um2",
+                   derived={"paper_um2": pa, "err_pct": round(ea, 2)})
+        report.add(f"table2_{name}_power", est.power_w, "W",
+                   derived={"paper_w": pp_, "err_pct": round(ep, 2)})
+    mean_a = sum(errs_a) / len(errs_a)
+    mean_p = sum(errs_p) / len(errs_p)
+    print(f"mean |err|: area {mean_a:.1f}%  power {mean_p:.1f}%")
+    report.add("table2_mean_abs_err_area", mean_a, "percent")
+    report.add("table2_mean_abs_err_power", mean_p, "percent")
+    # model-evaluation wall clock (informational; one representative design)
+    report.record("table2_estimate_call", lambda: ppa.estimate("ac", n=4),
+                  derived={"design": "AC4-4"}, warmup=1)
     # headline claims
     e = ppa.estimate("exact")
     ac44 = ppa.estimate("ac", n=4)
     acl5 = ppa.estimate("acl", n=5)
-    print(f"AC4-4 vs exact: area -{100*(1-ac44.logic_area_um2/e.logic_area_um2):.0f}% "
-          f"power -{100*(1-ac44.power_w/e.power_w):.0f}%  (paper headline: 69%/72%)")
-    print(f"ACL5  vs exact: area -{100*(1-acl5.logic_area_um2/e.logic_area_um2):.0f}% "
-          f"power -{100*(1-acl5.power_w/e.power_w):.0f}%  (paper: 78.4%/82.1%)")
+    ac44_a = 1 - ac44.logic_area_um2 / e.logic_area_um2
+    ac44_p = 1 - ac44.power_w / e.power_w
+    acl5_a = 1 - acl5.logic_area_um2 / e.logic_area_um2
+    acl5_p = 1 - acl5.power_w / e.power_w
+    print(f"AC4-4 vs exact: area -{100*ac44_a:.0f}% power -{100*ac44_p:.0f}%  "
+          f"(paper headline: 69%/72%)")
+    print(f"ACL5  vs exact: area -{100*acl5_a:.0f}% power -{100*acl5_p:.0f}%  "
+          f"(paper: 78.4%/82.1%)")
+    report.add("table2_ac44_area_saving", ac44_a, "ratio",
+               derived={"paper": 0.69})
+    report.add("table2_ac44_power_saving", ac44_p, "ratio",
+               derived={"paper": 0.72})
+    report.add("table2_acl5_area_saving", acl5_a, "ratio",
+               derived={"paper": 0.784})
+    report.add("table2_acl5_power_saving", acl5_p, "ratio",
+               derived={"paper": 0.821})
     da, dp = ppa.bd_omission_savings(5)
     print(f"BD omission (n=5): area -{100*da:.1f}% power -{100*dp:.1f}% "
           f"(paper: 6.8%/12.6%)")
+    report.add("table2_bd_omission_area_saving", da, "ratio",
+               derived={"paper": 0.068})
+    return report
 
 
 if __name__ == "__main__":

@@ -20,12 +20,19 @@ the composed-error sensitivity model (``repro.core.sensitivity``);
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from .harness import BenchReport
+except ImportError:  # run as a script: python benchmarks/<module>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.harness import BenchReport
 from repro.core.metrics import mred, nmed, top_k_accuracy
 from repro.core.numerics import NumericsConfig
 from repro.core.registry import get_multiplier
@@ -34,6 +41,7 @@ from repro.models import resnet
 from repro.models.layers import unzip
 from repro.optim import adamw
 from repro.session import Session
+
 
 # paper Table IV values for side-by-side printing
 PAPER = {
@@ -77,7 +85,8 @@ def train_resnet(steps=120, batch=64, seed=0, width_mult=0.5):
     return cfg, params, state
 
 
-def run(csv_rows=None, train_steps=120, eval_n=48):
+def run(report: BenchReport | None = None, train_steps=120, eval_n=48):
+    report = report if report is not None else BenchReport()
     print("\n== Table IV: ResNet-18 inference with approximate multipliers ==")
     cfg, params, state = train_resnet(steps=train_steps)
     dcfg = DataConfig(global_batch=eval_n, seed=999)
@@ -101,25 +110,36 @@ def run(csv_rows=None, train_steps=120, eval_n=48):
     pred_exact = np.argmax(np.asarray(logits_exact), -1)
 
     for name in MULTS:
-        t0 = time.perf_counter()
         mult = get_multiplier(name)
         ap = np.asarray(mult(jnp.asarray(xs), jnp.asarray(ys)))
         m, n = mred(ap, exact_prod), nmed(ap, exact_prod)
         ncfg = NumericsConfig(mode="emulated", multiplier=name,
                               seg_n=int(name[2]) if name.startswith("AC") and
                               name[2].isdigit() else 5)
-        logits = sess.replace(policy=ncfg).apply(images)
+        approx = sess.replace(policy=ncfg)
+        # emulated inference is minutes-scale on one CPU core: a single
+        # synced iteration through the shared harness, no warmup, and the
+        # timed call's logits are reused for the accuracy metrics
+        captured = {}
+
+        def _eval(approx=approx):
+            captured["logits"] = approx.apply(images)
+            return captured["logits"]
+
+        meas = report.record(f"table4_{name}", _eval, iters=1, warmup=0,
+                             derived={"eval_n": eval_n})
+        logits = captured["logits"]
         top1 = top_k_accuracy(logits, labels, 1)
         agree = float(np.mean(np.argmax(np.asarray(logits), -1) == pred_exact))
-        dt = (time.perf_counter() - t0) * 1e6
+        report.add(f"table4_{name}_top1_delta", float(top1 - top1_exact),
+                   "top1", derived={"mred": float(m), "agree": agree})
         pm = PAPER.get(name, (None,))[0]
         print(f"{name:8s} {m:9.2e} {pm if pm else 0:9.2e} {n:9.2e} "
-              f"{float(top1):6.3f} {float(top1 - top1_exact):+7.3f} {agree*100:6.1f}%")
-        if csv_rows is not None:
-            csv_rows.append((f"table4_{name}", dt,
-                             f"mred={m:.2e};top1_delta={float(top1-top1_exact):+.3f}"))
+              f"{float(top1):6.3f} {float(top1 - top1_exact):+7.3f} "
+              f"{agree*100:6.1f}%  [{meas.median_us/1e6:.1f}s eval]")
     print("paper-claim check: AC4-4/5-5/6-6 should show ~zero top-1 drop; "
           "NC the largest drop (Table IV).")
+    return report
 
 
 def run_auto(budget=1e-2, train_steps=120, calib_n=32, candidates="segmented",

@@ -1,0 +1,242 @@
+"""Benchmark harness + perf-trajectory gate contract tests.
+
+Three layers, matching docs/benchmarks.md:
+
+- the timing core (``benchmarks.harness.measure``) — warmup excluded,
+  every timed iteration synced, dispersion reported;
+- the ``BenchReport`` artifact — versioned schema, JSON round-trip,
+  duplicate-metric protection;
+- the trajectory gate (``tools/check_bench.py``) — passes on self-diff,
+  fails (exit 1) when a gated ratio leaves its band or disappears, and
+  reports structured errors (exit 2) on missing/mismatched artifacts.
+
+Guard-the-guard style (see tests/test_docs.py): the checker is exercised
+against deliberately broken artifacts, and the committed baseline
+(``benchmarks/BENCH_cpu_ci.json``) must itself stay loadable and gated.
+"""
+import copy
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks import harness  # noqa: E402
+
+BASELINE = REPO / "benchmarks" / "BENCH_cpu_ci.json"
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", REPO / "tools" / "check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------- timing core
+
+def test_measure_counts_warmup_and_timed_iterations():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return 1.0
+
+    meas = harness.measure(fn, iters=4, warmup=2)
+    assert len(calls) == 6  # 2 warmup + 4 timed
+    assert meas.iters == 4 and meas.warmup == 2
+    assert meas.median_us >= 0.0
+    assert meas.min_us <= meas.median_us <= meas.max_us
+
+
+def test_measure_rejects_zero_iters():
+    with pytest.raises(ValueError):
+        harness.measure(lambda: 1.0, iters=0)
+
+
+def test_measure_handles_jax_arrays_and_pytrees():
+    import jax.numpy as jnp
+
+    meas = harness.measure(lambda: {"y": jnp.arange(8) * 2}, iters=2, warmup=1)
+    assert meas.median_us > 0.0
+
+
+def test_measurement_dispersion_fields():
+    meas = harness.measure(lambda: 0, iters=5, warmup=0)
+    stats = meas.stats()
+    for key in ("median_us", "iqr_us", "min_us", "max_us", "iters", "warmup"):
+        assert key in stats
+    assert meas.rel_iqr >= 0.0
+
+
+# ---------------------------------------------------------------- BenchReport
+
+def test_report_round_trips_through_json(tmp_path):
+    rep = harness.BenchReport(fast=True)
+    rep.add("m_ratio", 1.5, "ratio", derived={"dims": "2x2"})
+    rep.record("m_time", lambda: 1.0, iters=2, warmup=0)
+    path = tmp_path / "BENCH_test.json"
+    rep.write(path)
+    data = json.loads(path.read_text())
+    assert data["schema"] == harness.SCHEMA
+    assert data["meta"]["fast"] is True
+    assert data["meta"]["jax"]  # environment stamped
+    assert data["metrics"]["m_ratio"]["value"] == 1.5
+    assert data["metrics"]["m_ratio"]["derived"] == {"dims": "2x2"}
+    assert data["metrics"]["m_time"]["unit"] == "us"
+    assert data["metrics"]["m_time"]["meta"]["iters"] == 2
+
+
+def test_report_rejects_duplicate_metric():
+    rep = harness.BenchReport()
+    rep.add("m", 1.0, "ratio")
+    with pytest.raises(ValueError):
+        rep.add("m", 2.0, "ratio")
+
+
+def test_report_csv_rows_match_metrics():
+    rep = harness.BenchReport()
+    rep.add("a", 1.0, "ratio", derived={"k": 1})
+    rep.add("b", 2.0, "us")
+    rows = list(rep.csv_rows())
+    assert [r[0] for r in rows] == ["a", "b"]
+    assert rows[0][2] == "ratio" and "k=1" in rows[0][3]
+
+
+def test_gated_units_cover_the_trajectory_policy():
+    # the unit-level gating table is the contract docs/benchmarks.md
+    # documents — a silent edit here must be a conscious policy change
+    assert set(harness.GATED_UNITS) == {"ratio", "dB", "um2", "W", "percent"}
+    assert "us" not in harness.GATED_UNITS  # wall-clock never gates CI
+
+
+# ------------------------------------------------------------------ the gate
+
+def _mini_report(**overrides):
+    rep = {
+        "schema": harness.SCHEMA,
+        "meta": {"fast": True},
+        "metrics": {
+            "k_ratio": {"value": 2.0, "unit": "ratio", "derived": {}, "meta": {}},
+            "k_time": {"value": 100.0, "unit": "us", "derived": {}, "meta": {}},
+        },
+    }
+    rep.update(overrides)
+    return rep
+
+
+def test_check_bench_passes_on_identical_reports(tmp_path):
+    cb = _load_check_bench()
+    violations, _ = cb.compare(_mini_report(), _mini_report())
+    assert violations == []
+
+
+def test_check_bench_fails_when_ratio_leaves_band(tmp_path):
+    cb = _load_check_bench()
+    fresh = copy.deepcopy(_mini_report())
+    fresh["metrics"]["k_ratio"]["value"] = 2.0 * 1.6  # +60% > ±50% band
+    violations, _ = cb.compare(_mini_report(), fresh)
+    assert len(violations) == 1 and "k_ratio" in violations[0]
+    # ... while the same drift on wall-clock stays informational
+    fresh2 = copy.deepcopy(_mini_report())
+    fresh2["metrics"]["k_time"]["value"] = 100.0 * 10
+    violations2, infos2 = cb.compare(_mini_report(), fresh2)
+    assert violations2 == []
+    assert any("k_time" in line for line in infos2)
+
+
+def test_check_bench_flags_missing_gated_metric():
+    cb = _load_check_bench()
+    fresh = copy.deepcopy(_mini_report())
+    del fresh["metrics"]["k_ratio"]
+    violations, _ = cb.compare(_mini_report(), fresh)
+    assert len(violations) == 1 and "missing" in violations[0]
+    # missing informational metric is not a violation
+    fresh2 = copy.deepcopy(_mini_report())
+    del fresh2["metrics"]["k_time"]
+    assert cb.compare(_mini_report(), fresh2)[0] == []
+
+
+def test_check_bench_flags_unit_change():
+    cb = _load_check_bench()
+    fresh = copy.deepcopy(_mini_report())
+    fresh["metrics"]["k_ratio"]["unit"] = "us"
+    violations, _ = cb.compare(_mini_report(), fresh)
+    assert len(violations) == 1 and "unit changed" in violations[0]
+
+
+def test_check_bench_tolerance_scale_loosens_bands():
+    cb = _load_check_bench()
+    fresh = copy.deepcopy(_mini_report())
+    fresh["metrics"]["k_ratio"]["value"] = 2.0 * 1.6
+    assert cb.compare(_mini_report(), fresh)[0]
+    assert cb.compare(_mini_report(), fresh, tolerance_scale=2.0)[0] == []
+
+
+def test_check_bench_structured_errors(tmp_path):
+    cb = _load_check_bench()
+    with pytest.raises(cb.BenchError, match="no such"):
+        cb.load_report(tmp_path / "nope.json")
+    bad_schema = tmp_path / "schema.json"
+    bad_schema.write_text(json.dumps(_mini_report(schema="repro-bench/99")))
+    with pytest.raises(cb.BenchError, match="schema"):
+        cb.load_report(bad_schema)
+    malformed = tmp_path / "malformed.json"
+    malformed.write_text(json.dumps(
+        {"schema": harness.SCHEMA, "meta": {},
+         "metrics": {"m": {"value": 1.0}}}))
+    with pytest.raises(cb.BenchError, match="malformed metric"):
+        cb.load_report(malformed)
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    with pytest.raises(cb.BenchError, match="unreadable"):
+        cb.load_report(garbage)
+
+
+def test_check_bench_cli_exit_codes(tmp_path):
+    # the CI contract: 0 pass / 1 violation / 2 structured error
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(_mini_report()))
+    drifted = tmp_path / "drift.json"
+    rep = copy.deepcopy(_mini_report())
+    rep["metrics"]["k_ratio"]["value"] = 99.0
+    drifted.write_text(json.dumps(rep))
+
+    def run(fresh, baseline):
+        return subprocess.run(
+            [sys.executable, str(REPO / "tools" / "check_bench.py"),
+             str(fresh), "--baseline", str(baseline)],
+            capture_output=True, text=True)
+
+    assert run(ok, ok).returncode == 0
+    proc = run(drifted, ok)
+    assert proc.returncode == 1 and "FAIL" in proc.stderr
+    proc = run(tmp_path / "missing.json", ok)
+    assert proc.returncode == 2 and "ERROR" in proc.stderr
+
+
+# -------------------------------------------------- committed baseline + CI
+
+def test_committed_baseline_is_schema_valid():
+    cb = _load_check_bench()
+    data = cb.load_report(BASELINE)  # raises BenchError if invalid
+    assert data["meta"]["fast"] is True  # CI diffs fast-vs-fast
+    # the headline gate metrics of each suite must be present
+    for name in ("kern_seg_matmul_p3_vs_exact", "table2_ac44_area_saving",
+                 "table3_AC5-5_psnr_blend"):
+        assert name in data["metrics"], name
+    gated = [n for n, m in data["metrics"].items()
+             if cb.tolerance_for(n, m["unit"]) is not None]
+    assert len(gated) >= 10
+
+
+def test_ci_bench_job_runs_the_gate():
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "python -m benchmarks.run --fast --skip-resnet" in ci
+    assert "tools/check_bench.py --baseline benchmarks/BENCH_cpu_ci.json" in ci

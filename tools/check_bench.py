@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: diff a fresh ``BENCH_*.json`` against the
+committed baseline with per-metric tolerance bands.
+
+Policy (documented in ``docs/benchmarks.md``):
+
+- **gated metrics** — units listed in ``benchmarks.harness.GATED_UNITS``
+  (timing *ratios* like ``kern_seg_matmul_p3_vs_exact``, deterministic
+  PPA-model outputs, PSNR accuracy) must stay inside their relative
+  tolerance band; a violation fails the run.  Ratios are the stable,
+  hardware-portable signal: both sides of the division are measured in
+  the same process on the same machine.
+- **informational metrics** — absolute wall-clock (``us`` etc.) varies
+  with the host; deltas are printed but never fail shared-CPU CI.
+- a gated metric present in the baseline but missing from the fresh run
+  is a violation (a silently dropped benchmark is a regression too);
+  extra fresh metrics are reported and ignored.
+
+Exit codes: ``0`` pass, ``1`` tolerance-band violation, ``2`` structured
+error (missing/unreadable file, schema mismatch).
+
+Usage::
+
+    python tools/check_bench.py --baseline benchmarks/BENCH_cpu_ci.json \
+        BENCH_fresh.json [--tolerance-scale S]
+
+Run by the ``bench`` job in ``.github/workflows/ci.yml`` and by
+``tests/test_bench_harness.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks.harness import GATED_UNITS, SCHEMA  # noqa: E402
+
+#: Per-metric relative-tolerance overrides (beat the per-unit default).
+TOLERANCES: dict[str, float] = {
+    # p1 is the cheapest segmented variant; its ratio to the exact matmul
+    # sits near 1 and wobbles the most on loaded CI machines
+    "kern_seg_matmul_p1_vs_exact": 0.75,
+}
+
+
+class BenchError(Exception):
+    """Structured failure (exit code 2): bad file, bad schema."""
+
+
+def load_report(path: str | Path) -> dict:
+    p = Path(path)
+    if not p.exists():
+        raise BenchError(f"{p}: no such benchmark artifact (generate with: "
+                         f"python -m benchmarks.run --json {p})")
+    try:
+        data = json.loads(p.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise BenchError(f"{p}: unreadable benchmark artifact: {e}")
+    schema = data.get("schema")
+    if schema != SCHEMA:
+        raise BenchError(f"{p}: schema {schema!r} does not match this "
+                         f"checker's {SCHEMA!r}; regenerate the artifact "
+                         f"(python -m benchmarks.run --json) or use a "
+                         f"matching tool version")
+    for field in ("meta", "metrics"):
+        if not isinstance(data.get(field), dict):
+            raise BenchError(f"{p}: malformed artifact: missing {field!r}")
+    for name, m in data["metrics"].items():
+        if not isinstance(m, dict) or "value" not in m or "unit" not in m:
+            raise BenchError(f"{p}: malformed metric {name!r}: expected "
+                             f"{{value, unit, derived, meta}}")
+    return data
+
+
+def tolerance_for(name: str, unit: str) -> float | None:
+    """Relative tolerance band for a gated metric; None = informational."""
+    if name in TOLERANCES:
+        return TOLERANCES[name]
+    return GATED_UNITS.get(unit)
+
+
+def compare(baseline: dict, fresh: dict, *, tolerance_scale: float = 1.0):
+    """Diff two artifacts.  Returns ``(violations, infos)`` line lists."""
+    violations, infos = [], []
+    base_m, fresh_m = baseline["metrics"], fresh["metrics"]
+    if baseline["meta"].get("fast") != fresh["meta"].get("fast"):
+        infos.append("note: fast-mode flag differs between baseline and "
+                     "fresh run; absolute numbers are not comparable")
+    for name, b in sorted(base_m.items()):
+        tol = tolerance_for(name, b["unit"])
+        f = fresh_m.get(name)
+        if f is None:
+            if tol is not None:
+                violations.append(f"{name}: gated metric missing from "
+                                  f"fresh run (baseline {b['value']:.4g} "
+                                  f"{b['unit']})")
+            else:
+                infos.append(f"{name}: informational metric missing from "
+                             f"fresh run")
+            continue
+        if f["unit"] != b["unit"]:
+            violations.append(f"{name}: unit changed "
+                              f"{b['unit']!r} -> {f['unit']!r}")
+            continue
+        bv, fv = b["value"], f["value"]
+        rel = abs(fv - bv) / abs(bv) if bv else abs(fv)
+        line = (f"{name}: {bv:.4g} -> {fv:.4g} {b['unit']} "
+                f"({rel:+.1%} drift)")
+        if tol is None:
+            infos.append(line)
+        elif rel > tol * tolerance_scale:
+            violations.append(f"{line} exceeds ±{tol * tolerance_scale:.1%} band")
+        else:
+            infos.append(f"{line} within ±{tol * tolerance_scale:.1%} band")
+    for name in sorted(set(fresh_m) - set(base_m)):
+        infos.append(f"{name}: new metric (not in baseline) — "
+                     f"{fresh_m[name]['value']:.4g} {fresh_m[name]['unit']}")
+    return violations, infos
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a fresh BENCH_*.json against the committed "
+                    "perf-trajectory baseline")
+    ap.add_argument("fresh", help="freshly generated BENCH_*.json")
+    ap.add_argument("--baseline", default=str(REPO / "benchmarks" / "BENCH_cpu_ci.json"),
+                    help="committed trajectory artifact (default: "
+                         "benchmarks/BENCH_cpu_ci.json)")
+    ap.add_argument("--tolerance-scale", type=float, default=1.0,
+                    help="scale every tolerance band (e.g. 2.0 to loosen "
+                         "all bands 2x on a known-noisy host)")
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = load_report(args.baseline)
+        fresh = load_report(args.fresh)
+    except BenchError as e:
+        print(f"ERROR {e}", file=sys.stderr)
+        return 2
+
+    violations, infos = compare(baseline, fresh,
+                                tolerance_scale=args.tolerance_scale)
+    for line in infos:
+        print(f"  {line}")
+    for line in violations:
+        print(f"FAIL {line}", file=sys.stderr)
+    n_gated = sum(1 for n, m in baseline["metrics"].items()
+                  if tolerance_for(n, m["unit"]) is not None)
+    print(f"check_bench: {len(baseline['metrics'])} baseline metrics "
+          f"({n_gated} gated), {len(violations)} violation(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
