@@ -1,0 +1,113 @@
+"""Serving-engine benchmark: continuous batching vs solo generation.
+
+Times one identical workload (N requests, same prompts/lengths) two ways
+on the same resident weights in the same process:
+
+- **solo** — sequential per-request ``Session.generate`` (batch 1), the
+  no-batching baseline every request's bits are defined by;
+- **serving** — the continuous-batching :class:`repro.serving.Engine`
+  (one tier, N requests over fewer KV slots, mid-decode joins and
+  per-step retirement).
+
+The gate metric is their co-measured ratio ``serving_vs_solo_generate``
+(engine time / solo time, < 1 means batching wins) — hardware-portable,
+so it rides in ``GATED_UNITS`` like the kernel ratios.  Per-tier
+throughput of the SLA ladder (exact premium vs segmented bulk) is
+informational (``tok/s`` varies with the host) and carries each tier's
+modeled area/power (``Session.ppa_report``) in ``derived``, tying the
+serving artifact back to the paper's PPA tables.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:
+    from .harness import BenchReport, measure
+except ImportError:  # run as a script: python benchmarks/<module>.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.harness import BenchReport, measure
+from repro.session import Session
+from repro.serving import TierSpec
+
+
+def _workload(session, n_requests: int, prompt_len: int):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, session.config.vocab, prompt_len)
+            for _ in range(n_requests)]
+
+
+def run(report: BenchReport | None = None):
+    report = report if report is not None else BenchReport()
+    print("\n== serving engine (continuous batching, accuracy tiers) ==")
+    n_requests = 4 if report.fast else 8
+    prompt_len = 8
+    gen_len = 8 if report.fast else 16
+    slots = 2 if report.fast else 4
+    sess = Session("qwen3-4b")
+    prompts = _workload(sess, n_requests, prompt_len)
+    wl = {"n_requests": n_requests, "prompt_len": prompt_len,
+          "gen_len": gen_len, "slots": slots}
+    n_tokens = n_requests * gen_len
+
+    def solo():
+        return [sess.generate(prompts=p[None], gen_len=gen_len).tokens
+                for p in prompts]
+
+    eng = sess.serving_engine((TierSpec("serve", "exact"),), slots=slots,
+                              max_len=prompt_len + gen_len)
+
+    def serving():
+        reqs = [eng.submit(p, tier="serve", max_new_tokens=gen_len)
+                for p in prompts]
+        eng.run()
+        return [r.result() for r in reqs]
+
+    m_solo = measure(solo, iters=report.default_iters)
+    m_srv = measure(serving, iters=report.default_iters)
+    report.add("serving_solo_generate", m_solo.median_us, "us",
+               derived=dict(wl), meta=m_solo.stats())
+    report.add("serving_engine_run", m_srv.median_us, "us",
+               derived=dict(wl), meta=m_srv.stats())
+    ratio = m_srv.median_us / m_solo.median_us
+    # the stable, hardware-portable gate metric: both sides timed in the
+    # same process on the same weights and prompts
+    report.add("serving_vs_solo_generate", ratio, "ratio", derived=dict(wl))
+    print(f"{'solo generate x' + str(n_requests):28s} "
+          f"{m_solo.median_us:10.1f} us")
+    print(f"{'continuous batching':28s} {m_srv.median_us:10.1f} us "
+          f"({ratio:.2f}x solo, {n_tokens / m_srv.median_us * 1e6:.1f} "
+          f"tok/s)")
+
+    # per-tier throughput of the SLA ladder: informational tok/s, with the
+    # tier's modeled PPA in derived (never gated — see docs/benchmarks.md)
+    for tier, policy in (("premium", "exact"), ("bulk", "segmented1")):
+        teng = sess.serving_engine((TierSpec(tier, policy),), slots=slots,
+                                   max_len=prompt_len + gen_len)
+
+        def tier_run(te=teng, name=tier):
+            reqs = [te.submit(p, tier=name, max_new_tokens=gen_len)
+                    for p in prompts]
+            te.run()
+            return [r.result() for r in reqs]
+
+        m = measure(tier_run, iters=report.default_iters)
+        tok_s = n_tokens / m.median_us * 1e6
+        ppa = sess.replace(policy=policy).ppa_report()
+        report.add(f"serving_{tier}_tok_s", tok_s, "tok/s",
+                   derived=dict(wl, policy=policy,
+                                area_um2=round(ppa["area_um2"], 1),
+                                power_w=round(ppa["power_w"], 4),
+                                area_reduction=round(ppa["area_reduction"],
+                                                     4)),
+                   meta=m.stats())
+        print(f"{'tier ' + tier + ' (' + policy + ')':28s} "
+              f"{tok_s:10.1f} tok/s (area {ppa['area_um2']:,.0f} um^2, "
+              f"{ppa['power_w']:.3f} W modeled)")
+    return report
+
+
+if __name__ == "__main__":
+    run()

@@ -37,7 +37,8 @@ def main(argv=None) -> None:
                          "(default: BENCH_<host>.json in the cwd)")
     args = ap.parse_args(argv)
 
-    from benchmarks import bench_kernels, roofline, table2_ppa, table3_image
+    from benchmarks import (bench_kernels, bench_serving, roofline,
+                            table2_ppa, table3_image)
     from benchmarks.harness import BenchReport
 
     report = BenchReport(fast=args.fast, iters=args.iters)
@@ -45,6 +46,7 @@ def main(argv=None) -> None:
     table3_image.run(report)
     bench_kernels.run(report)
     roofline.run(report)
+    bench_serving.run(report)
     if not args.skip_resnet:
         from benchmarks import table4_resnet
 

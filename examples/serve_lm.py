@@ -1,27 +1,51 @@
-"""Serve a small LM with batched requests under the paper's numerics knob.
+"""Serve a small LM with accuracy-tiered SLAs in ONE engine.
 
-Compares exact / segmented-3 (AC-like) / segmented-1 (ACL-like) serving on
-the same weights: latency and greedy-token agreement — the system-level
-face of the accuracy-PPA trade-off.
+The paper's accuracy knob as a *traffic* knob: premium requests decode
+exact, standard under the 3-pass segmented multiplier (AC-like), bulk
+under 1 pass (ACL-like) — all three tiers continuously batched over the
+SAME resident weights, each tier on its own KV-slot pool and resident
+compiled decode.  Continuous batching is bit-transparent: every request's
+tokens equal a solo ``Session.generate`` under its tier's numerics, so
+the only accuracy trade-off is the one you configured.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 import numpy as np
 
-from repro.launch.serve import serve
+from repro.session import Session, print_ppa_report
+from repro.serving import DEFAULT_TIERS
 
 
 def main():
-    print("== batched serving under configurable numerics ==")
-    ref = serve("qwen3-4b", batch=4, prompt_len=32, gen_len=12,
-                numerics="exact", seed=7)
-    for mode in ("segmented3", "segmented2", "segmented1"):
-        got = serve("qwen3-4b", batch=4, prompt_len=32, gen_len=12,
-                    numerics=mode, seed=7)
-        agree = float(np.mean(got == ref))
-        print(f"   {mode}: greedy-token agreement vs exact = {agree*100:.0f}%")
-    print("\n3 passes (AC-like, BD dropped) preserves decoding; 1 pass "
-          "(ACL-like) trades tokens for 3x fewer MXU passes.")
+    print("== accuracy-tiered continuous batching ==")
+    sess = Session("qwen3-4b", seed=7)
+    eng = sess.serving_engine(DEFAULT_TIERS, slots=2, max_len=48)
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(6):  # 2 requests per tier, staggered lengths
+        tier = DEFAULT_TIERS[i % len(DEFAULT_TIERS)]
+        prompt = rng.integers(0, sess.config.vocab, 8 + 3 * (i // 3))
+        reqs.append(eng.submit(prompt, tier=tier.name, max_new_tokens=12))
+    stats = eng.run()
+
+    for spec in DEFAULT_TIERS:
+        s = stats[spec.name]
+        print(f"   {spec.name:8s} ({spec.policy}): {s.n_finished} requests, "
+              f"{s.n_tokens} tokens over {s.n_decode_steps} decode steps "
+              f"(mean batch {s.mean_occupancy:.2f})")
+        print_ppa_report(sess.replace(policy=spec.policy).ppa_report(),
+                         tag=f"tier:{spec.name}")
+
+    # the bit-transparency claim, checked live: each request matches its
+    # solo generate under the same tier policy
+    policy = {t.name: t.policy for t in DEFAULT_TIERS}
+    for r in reqs:
+        solo = sess.replace(policy=policy[r.tier]).generate(
+            prompts=r.prompt[None], gen_len=r.max_new_tokens)
+        assert np.array_equal(r.result(), solo.tokens[0]), r.id
+    print("\nall requests bit-identical to solo generation under their "
+          "tier's numerics; the SLA ladder spends area/power only where "
+          "the traffic class paid for it.")
 
 
 if __name__ == "__main__":

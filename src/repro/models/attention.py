@@ -60,6 +60,38 @@ def _repeat_kv(k, n_rep):
     )
 
 
+def _row_pos(pos, rank):
+    """Normalize a decode position to broadcast against a (..., S) score.
+
+    ``pos`` is a scalar during lockstep decoding and a per-row ``(B,)``
+    vector under continuous batching (every request sits at its own
+    absolute position).  Returns an array shaped to broadcast over the
+    leading batch axis of a rank-``rank`` score tensor whose last axis is
+    the cache sequence."""
+    pos = jnp.asarray(pos)
+    if pos.ndim:
+        return pos.reshape((-1,) + (1,) * (rank - 1))
+    return pos
+
+
+def _scatter_row(buf, new, pos):
+    """Write ``new`` (B, 1, ...) into ``buf`` (B, S, ...) at per-row
+    sequence position ``pos`` (B,) — the vector-position analogue of
+    ``dynamic_update_slice_in_dim`` (same written bits, per-row starts)."""
+    sel = jnp.arange(buf.shape[1])[None, :] == pos[:, None]
+    sel = sel.reshape(sel.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(sel, new.astype(buf.dtype), buf)
+
+
+def _cache_update(buf, new, pos):
+    """Update a (B, S, ...) cache at decode position ``pos`` (scalar:
+    lockstep batch; (B,) vector: continuous batching)."""
+    if jnp.ndim(pos):
+        return _scatter_row(buf, new, pos)
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, new.astype(buf.dtype), pos, axis=1)
+
+
 def _mask_for(qp, kp, kvalid, causal, window):
     mask = kvalid[None, None, None, :]
     if causal:
@@ -282,9 +314,10 @@ def gqa_apply(params, x, cfg, spec, positions,
             "v": logical_constraint(v, ("batch", "kv_seq", None, None)),
         }
     else:
-        # decode: S == 1; update cache at q_offset, attend full cache
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), q_offset, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), q_offset, axis=1)
+        # decode: S == 1; update cache at q_offset (scalar, or (B,) vector
+        # under continuous batching), attend full cache
+        k_cache = _cache_update(cache["k"], k, q_offset)
+        v_cache = _cache_update(cache["v"], v, q_offset)
         k_cache = logical_constraint(k_cache, ("batch", "kv_seq", None, None))
         v_cache = logical_constraint(v_cache, ("batch", "kv_seq", None, None))
         out = decode_attention(
@@ -299,6 +332,10 @@ def gqa_apply(params, x, cfg, spec, positions,
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, attn_cap=None):
     """Single-step attention against the full cache (seq may be mesh-sharded).
+
+    ``pos`` is the absolute decode position — a scalar for a lockstep
+    batch, or a ``(B,)`` vector when every row sits at its own position
+    (continuous batching).
 
     GQA-aware: the query is grouped as (B, KH, G, D) and contracted against
     the UNexpanded cache — materializing head-repeated K/V (broadcast) makes
@@ -316,9 +353,10 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, attn_cap=None):
     if attn_cap is not None:
         s = softcap(s, attn_cap)
     k_pos = jnp.arange(k_cache.shape[1])
-    mask = k_pos[None, None, None, :] <= pos
+    pr = _row_pos(pos, 4)
+    mask = k_pos[None, None, None, :] <= pr
     if window is not None:
-        mask = mask & (pos - k_pos[None, None, None, :] < window)
+        mask = mask & (pr - k_pos[None, None, None, :] < window)
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(jnp.bfloat16),
@@ -395,8 +433,8 @@ def mla_apply(params, x, cfg, spec, positions, cache=None, q_offset=0):
     else:
         # decode: absorbed form — project q into the latent space and attend
         # the latent cache directly (never materialize per-head K/V).
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), q_offset, axis=1)
-        kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], k_pe.reshape(B, S, dr).astype(cache["kpe"].dtype), q_offset, axis=1)
+        ckv_c = _cache_update(cache["ckv"], ckv, q_offset)
+        kpe_c = _cache_update(cache["kpe"], k_pe.reshape(B, S, dr), q_offset)
         ckv_c = logical_constraint(ckv_c, ("batch", "kv_seq", None))
         kpe_c = logical_constraint(kpe_c, ("batch", "kv_seq", None))
         q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b.astype(x.dtype))  # (B,1,H,r)
@@ -405,7 +443,7 @@ def mla_apply(params, x, cfg, spec, positions, cache=None, q_offset=0):
         s = s + jnp.einsum("bhd,bkd->bhk", q_pe[:, 0].astype(jnp.bfloat16),
                            kpe_c.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
         s = s * ((dn + dr) ** -0.5)
-        mask = jnp.arange(ckv_c.shape[1])[None, None, :] <= q_offset
+        mask = jnp.arange(ckv_c.shape[1])[None, None, :] <= _row_pos(q_offset, 3)
         s = jnp.where(mask, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         o_lat = jnp.einsum("bhk,bkr->bhr", p.astype(jnp.bfloat16),

@@ -410,7 +410,12 @@ def init(cfg, key):
 def _positions_for(cfg, batch, B, S, offset=0):
     if "positions" in batch:
         return batch["positions"]
-    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim:
+        # per-row decode offsets (continuous batching): each request sits
+        # at its own absolute position
+        off = off[:, None]
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + off
     pos = jnp.broadcast_to(pos, (B, S))
     if cfg.mrope_sections is not None:
         pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
@@ -519,7 +524,13 @@ def prefill(params, cfg, batch, max_len=None):
 
 
 def decode_step(params, cfg, batch, state, pos):
-    """One decode step: batch['token'] (B,1) int32; pos = absolute position."""
+    """One decode step: batch['token'] (B,1) int32; pos = absolute position.
+
+    ``pos`` is a scalar when the whole batch decodes in lockstep
+    (``Session.generate``) or a ``(B,)`` int32 vector when each row sits at
+    its own position (the continuous-batching engine of
+    ``repro.serving``); rope, cache writes and attention masks all follow
+    the per-row positions."""
     enc = state.get("enc_out")
     hidden, new_layers, _ = backbone(
         params, cfg, {"tokens": batch["token"]},

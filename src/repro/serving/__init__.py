@@ -1,0 +1,39 @@
+"""Serving layer: continuous batching over Session with accuracy-tiered SLAs.
+
+>>> from repro.session import Session
+>>> from repro.serving import Engine, DEFAULT_TIERS
+>>> eng = Engine.from_session(Session("qwen3-4b"), slots=4, max_len=64)
+>>> r = eng.submit(prompt, tier="premium", max_new_tokens=16)
+>>> eng.run()
+>>> r.result()          # bit-identical to a solo Session.generate
+
+Design: ``docs/serving.md``.  Scheduling/queueing in
+:mod:`repro.serving.scheduler`, the pooled KV cache in
+:mod:`repro.serving.kvcache`, the batching loop in
+:mod:`repro.serving.engine`.
+"""
+from repro.serving.engine import (Engine, Event, ModelRunner, TierStats,
+                                  TransformerRunner)
+from repro.serving.kvcache import (ServingError, SlotAllocator, pool_init,
+                                   read_slot, write_slot)
+from repro.serving.scheduler import (DEFAULT_TIERS, FakeClock, MonotonicClock,
+                                     Request, Scheduler, TierSpec)
+
+__all__ = [
+    "DEFAULT_TIERS",
+    "Engine",
+    "Event",
+    "FakeClock",
+    "ModelRunner",
+    "MonotonicClock",
+    "Request",
+    "Scheduler",
+    "ServingError",
+    "SlotAllocator",
+    "TierSpec",
+    "TierStats",
+    "TransformerRunner",
+    "pool_init",
+    "read_slot",
+    "write_slot",
+]

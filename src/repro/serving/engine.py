@@ -1,0 +1,323 @@
+"""Continuous-batching serving engine with accuracy-tiered SLAs.
+
+One engine serves many concurrent requests over ONE set of resident
+weights.  Each accuracy tier (``premium`` exact, ``bulk`` segmented, …)
+owns a **lane**: a KV-slot pool (:mod:`repro.serving.kvcache`) plus one
+resident compiled ``decode_step`` closed over that tier's
+:class:`~repro.core.policy.NumericsPolicy` — the policy is established by
+``numerics_scope`` inside ``transformer.backbone``, so routing a request
+to a tier is just routing it to a lane.  Per engine step:
+
+1. **admit** — free slots pull queued requests in scheduler order; each
+   admitted prompt is prefilled (batch 1) and scattered into its slot,
+   producing the request's first token;
+2. **decode** — every lane with active requests runs ONE resident
+   ``decode_step`` over its whole pool with a per-row position vector
+   (new requests join mid-decode, rows past retirement are ignored);
+3. **retire** — requests reaching ``max_new_tokens`` free their slot the
+   same step, so the next admission reuses it.
+
+Continuous batching never changes a request's numerics: every token is
+bit-identical to a solo ``Session.generate`` of the same prompt under the
+same policy (the decode path is row-parallel and the per-row position
+vector reproduces the solo masks/rope/cache writes exactly — asserted on
+the real model in ``tests/test_serving_numerics.py``).
+
+Streaming: ``submit(..., on_token=cb)`` fires ``cb(request, token,
+done)`` as tokens land; ``step()`` also returns the step's
+:class:`Event` list for poll-style consumers.
+
+The engine is model-agnostic behind the :class:`ModelRunner` duck type,
+so the scheduler/batching logic is testable with a pure-Python stub and
+no compilation (``tests/serving_sim.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.kvcache import ServingError, SlotAllocator, pool_init, \
+    write_slot
+from repro.serving.scheduler import (DEFAULT_TIERS, FakeClock, MonotonicClock,
+                                     Request, Scheduler, TierSpec)
+
+__all__ = ["Engine", "Event", "ModelRunner", "TransformerRunner",
+           "TierStats"]
+
+
+class ModelRunner:
+    """What a lane needs from a model (duck-typed; this class is the
+    documentation).  ``n_slots``/``max_len`` size the lane's pool;
+    ``prefill(prompt)`` returns ``(first_token, state)`` for a 1-D int32
+    prompt; ``write_slot(slot, state)`` installs that state into the
+    resident pool; ``decode(tokens, pos)`` advances the WHOLE pool one
+    step from per-slot last tokens and absolute positions (both
+    ``(n_slots,)`` int32) and returns the per-slot next tokens."""
+
+    n_slots: int
+    max_len: int
+
+    def prefill(self, prompt: np.ndarray):
+        raise NotImplementedError
+
+    def write_slot(self, slot: int, state) -> None:
+        raise NotImplementedError
+
+    def decode(self, tokens: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+
+class TransformerRunner(ModelRunner):
+    """The real lane runner: resident pool + one jitted decode per tier.
+
+    The decode closure is compiled ONCE per lane for the fixed pool shape
+    ``(n_slots, max_len)`` and stays resident across the engine's
+    lifetime; prefill is jitted per observed prompt length (prompts are
+    not padded — padding would change the prefill numerics vs a solo
+    run).  Greedy argmax happens outside the jit, mirroring
+    ``Session.generate`` so the token stream is bit-comparable.
+    """
+
+    def __init__(self, cfg, params, n_slots: int, max_len: int):
+        import jax
+
+        from repro.models import transformer
+
+        if cfg.encoder_layers:
+            raise ServingError(
+                f"{cfg.arch_id}: encoder-decoder archs are not servable by "
+                f"the token-only engine (requests carry no encoder inputs)")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.pool = pool_init(cfg, n_slots, max_len)
+        self._decode = jax.jit(
+            lambda p, tok, st, pos: transformer.decode_step(
+                p, cfg, {"token": tok}, st, pos))
+        self._prefill = {}  # prompt_len -> jitted prefill
+
+    def prefill(self, prompt: np.ndarray):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import transformer
+
+        L = int(np.asarray(prompt).shape[-1])
+        if L not in self._prefill:
+            self._prefill[L] = jax.jit(
+                lambda p, b: transformer.prefill(p, self.cfg, b,
+                                                 max_len=self.max_len))
+        logits, state = self._prefill[L](
+            self.params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]})
+        token = int(jnp.argmax(logits[:, -1:], axis=-1)[0, 0])
+        return token, state
+
+    def write_slot(self, slot: int, state) -> None:
+        self.pool = write_slot(self.pool, slot, state)
+
+    def decode(self, tokens: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        logits, self.pool = self._decode(
+            self.params, jnp.asarray(tokens, jnp.int32)[:, None], self.pool,
+            jnp.asarray(pos, jnp.int32))
+        return np.asarray(jnp.argmax(logits[:, -1:], axis=-1), np.int32)[:, 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One streaming event: ``admit`` (slot granted), ``token`` (one
+    generated token, the prefill token included) or ``finish``."""
+
+    kind: str
+    request_id: str
+    tier: str
+    step: int
+    time: float
+    token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class TierStats:
+    n_finished: int = 0
+    n_tokens: int = 0
+    n_decode_steps: int = 0
+    occupancy_sum: int = 0      # active requests summed over decode steps
+
+    @property
+    def mean_occupancy(self) -> float:
+        return (self.occupancy_sum / self.n_decode_steps
+                if self.n_decode_steps else 0.0)
+
+
+@dataclasses.dataclass
+class _Lane:
+    spec: TierSpec
+    runner: ModelRunner
+    alloc: SlotAllocator
+    active: dict            # slot -> Request
+    stats: TierStats
+
+
+class Engine:
+    """The continuous-batching serving engine (see module docstring)."""
+
+    def __init__(self, runners: Mapping[str, ModelRunner],
+                 tiers: Optional[Sequence[TierSpec]] = None,
+                 *, clock=None, aging: Optional[float] = None):
+        tiers = tuple(tiers) if tiers is not None else tuple(
+            TierSpec(name, priority=i)
+            for i, name in enumerate(runners))
+        by_name = {t.name: t for t in tiers}
+        if set(by_name) != set(runners):
+            raise ServingError(
+                f"tier specs {sorted(by_name)} do not match runners "
+                f"{sorted(runners)}")
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.scheduler = Scheduler(tuple(by_name), aging=aging)
+        self._lanes = {
+            name: _Lane(spec=by_name[name], runner=runner,
+                        alloc=SlotAllocator(runner.n_slots), active={},
+                        stats=TierStats())
+            for name, runner in runners.items()
+        }
+        self._step = 0
+        self._n_submitted = 0
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_session(cls, session, tiers: Sequence[TierSpec] = DEFAULT_TIERS,
+                     *, slots: int = 4, max_len: int = 64, clock=None,
+                     aging: Optional[float] = None) -> "Engine":
+        """Build real lanes over a :class:`repro.session.Session`: one
+        :class:`TransformerRunner` per tier, every tier's config sharing
+        the session's resident params (tier policies go through the same
+        coercion as ``Session(policy=...)``)."""
+        runners = {}
+        for spec in tiers:
+            tier_sess = session.replace(policy=spec.policy)
+            runners[spec.name] = TransformerRunner(
+                tier_sess.config, session.params, slots, max_len)
+        return cls(runners, tiers, clock=clock, aging=aging)
+
+    # -- submission ---------------------------------------------------------
+
+    @property
+    def tiers(self) -> tuple:
+        return tuple(self._lanes)
+
+    def lane_stats(self) -> dict:
+        return {name: lane.stats for name, lane in self._lanes.items()}
+
+    def submit(self, prompt, tier: Optional[str] = None,
+               max_new_tokens: int = 16, *, request_id: Optional[str] = None,
+               priority: Optional[int] = None, on_token=None) -> Request:
+        """Queue one request; returns the live :class:`Request` handle
+        (its ``tokens``/``done`` fields update as the engine steps)."""
+        if tier is None:
+            tier = next(iter(self._lanes))
+        lane = self._lanes.get(tier)
+        if lane is None:
+            raise ServingError(f"unknown tier {tier!r}; engine serves "
+                               f"{sorted(self._lanes)}")
+        req = Request(
+            id=request_id or f"r{self._n_submitted}",
+            prompt=prompt,
+            max_new_tokens=max_new_tokens,
+            tier=tier,
+            priority=(priority if priority is not None
+                      else lane.spec.priority),
+            on_token=on_token,
+        )
+        self._n_submitted += 1
+        need = req.prompt.shape[0] + req.max_new_tokens - 1
+        if need > lane.runner.max_len:
+            raise ServingError(
+                f"request {req.id!r} needs {need} cache positions "
+                f"(prompt {req.prompt.shape[0]} + {req.max_new_tokens} new) "
+                f"but tier {tier!r} pools max_len={lane.runner.max_len}")
+        return self.scheduler.submit(req, self.clock.now())
+
+    # -- the serving loop ---------------------------------------------------
+
+    def _emit(self, events, req, kind, token=None):
+        now = self.clock.now()
+        events.append(Event(kind=kind, request_id=req.id, tier=req.tier,
+                            step=self._step, time=now, token=token))
+        if kind == "token" and req.on_token is not None:
+            req.on_token(req, token, len(req.tokens) >= req.max_new_tokens)
+
+    def _land_token(self, events, lane, req, token: int):
+        req.tokens.append(int(token))
+        lane.stats.n_tokens += 1
+        self._emit(events, req, "token", token=int(token))
+        if len(req.tokens) >= req.max_new_tokens:
+            req.finish_time = self.clock.now()
+            req.finish_step = self._step
+            lane.alloc.free(req.slot)
+            del lane.active[req.slot]
+            lane.stats.n_finished += 1
+            self._emit(events, req, "finish")
+
+    def step(self) -> list:
+        """One engine step: admit -> decode every lane -> retire.
+        Returns the step's events (admissions, tokens, finishes)."""
+        self._step += 1
+        events = []
+        now = self.clock.now()
+        for name, lane in self._lanes.items():
+            # admit while there is room — new requests join mid-decode
+            while (lane.alloc.n_free
+                   and self.scheduler.pending(name)):
+                req = self.scheduler.pop_next(name, now)
+                req.slot = lane.alloc.alloc(req.id)
+                req.admit_time = now
+                req.admit_step = self._step
+                token, state = lane.runner.prefill(req.prompt)
+                lane.runner.write_slot(req.slot, state)
+                req.pos = req.prompt.shape[0]
+                lane.active[req.slot] = req
+                self._emit(events, req, "admit")
+                self._land_token(events, lane, req, token)
+        for name, lane in self._lanes.items():
+            if not lane.active:
+                continue
+            n = lane.runner.n_slots
+            tokens = np.zeros(n, np.int32)
+            pos = np.zeros(n, np.int32)
+            for slot, req in lane.active.items():
+                tokens[slot] = req.tokens[-1]
+                pos[slot] = req.pos
+            nxt = lane.runner.decode(tokens, pos)
+            lane.stats.n_decode_steps += 1
+            lane.stats.occupancy_sum += len(lane.active)
+            # iterate a snapshot: retirement mutates lane.active
+            for slot, req in sorted(lane.active.items()):
+                req.pos += 1
+                self._land_token(events, lane, req, nxt[slot])
+        return events
+
+    @property
+    def idle(self) -> bool:
+        return (self.scheduler.pending() == 0
+                and all(not l.active for l in self._lanes.values()))
+
+    def run(self, max_steps: int = 100_000) -> dict:
+        """Step until every queued request has finished; returns
+        ``lane_stats()``.  ``max_steps`` bounds the drain (a structured
+        :class:`ServingError` instead of a hang)."""
+        steps = 0
+        while not self.idle:
+            if steps >= max_steps:
+                raise ServingError(
+                    f"engine did not drain within {max_steps} steps "
+                    f"({self.scheduler.pending()} queued, "
+                    f"{sum(len(l.active) for l in self._lanes.values())} "
+                    f"active)")
+            self.step()
+            steps += 1
+        return self.lane_stats()

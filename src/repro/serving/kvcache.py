@@ -1,0 +1,135 @@
+"""Pooled KV cache: a slot allocator over a fixed decode pool.
+
+The continuous-batching engine keeps ONE resident serving state per
+accuracy tier — the pool — whose batch axis is a fixed set of ``slots``.
+A request occupies a slot from admission to retirement; the allocator
+(:class:`SlotAllocator`) is plain host-side bookkeeping, so exhaustion is
+a structured :class:`ServingError` raised at admission time, never an XLA
+shape error mid-step.
+
+The pool pytree is exactly :func:`repro.models.transformer.init_state`
+with ``batch = n_slots``, which is what makes it directly consumable by
+``transformer.decode_step``: no gather is needed on the decode path —
+the whole pool decodes in one resident compiled step and inactive slots
+are simply ignored by the engine.  Scatter/gather happens only at the
+slot boundary:
+
+- :func:`write_slot` copies a freshly prefilled single-request state
+  (batch 1, same ``max_len``) into one slot, overwriting the slot's full
+  buffers so nothing leaks from a previous occupant;
+- :func:`read_slot` is the inverse view (used by tests and golden
+  fixtures to check the round-trip against a dense reference).
+
+Layer-cache leaves are stacked ``(repeats, batch, ...)`` (see
+``transformer.init_state``), so their slot axis is 1; the encoder-output
+slot (``enc_out``) carries batch at axis 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+class ServingError(RuntimeError):
+    """A serving-layer error with a one-line message (queue/slot/engine
+    misuse) — the serving analogue of ``repro.session.SessionError``."""
+
+
+@dataclasses.dataclass
+class SlotAllocator:
+    """Fixed-size slot pool; allocation order is lowest-free-slot-first
+    (deterministic, and keeps the active prefix of the pool dense-ish)."""
+
+    n_slots: int
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ServingError(
+                f"slot pool needs at least 1 slot, got {self.n_slots}")
+        self._owner: dict[int, str] = {}
+
+    @property
+    def n_free(self) -> int:
+        return self.n_slots - len(self._owner)
+
+    @property
+    def owners(self) -> dict[int, str]:
+        """slot -> request id for every occupied slot (a copy)."""
+        return dict(self._owner)
+
+    def alloc(self, request_id: str) -> int:
+        """Claim the lowest free slot for ``request_id``; raises
+        :class:`ServingError` when the pool is exhausted."""
+        for slot in range(self.n_slots):
+            if slot not in self._owner:
+                self._owner[slot] = request_id
+                return slot
+        raise ServingError(
+            f"KV pool exhausted: all {self.n_slots} slots in use "
+            f"(admitting {request_id!r}); retire a request or grow the pool")
+
+    def free(self, slot: int) -> None:
+        if slot not in self._owner:
+            raise ServingError(f"slot {slot} is not allocated")
+        del self._owner[slot]
+
+    def owner(self, slot: int) -> Optional[str]:
+        return self._owner.get(slot)
+
+
+# ---------------------------------------------------------------------------
+# pool pytree scatter/gather (transformer serving state)
+# ---------------------------------------------------------------------------
+
+def pool_init(cfg, n_slots: int, max_len: int, dtype=None):
+    """The resident decode pool: ``transformer.init_state`` with the slot
+    set as the batch axis."""
+    import jax.numpy as jnp
+
+    from repro.models import transformer
+
+    return transformer.init_state(cfg, n_slots, max_len,
+                                  dtype=jnp.dtype(dtype or cfg.dtype))
+
+
+def _leaf_write(pool_leaf, req_leaf, slot: int, axis: int):
+    import jax.numpy as jnp
+
+    src = jnp.take(req_leaf, 0, axis=axis).astype(pool_leaf.dtype)
+    return pool_leaf.at[(slice(None),) * axis + (slot,)].set(src)
+
+
+def write_slot(pool, slot: int, state):
+    """Copy a single-request serving state (batch 1, same ``max_len``)
+    into ``slot`` of the pool.  The FULL slot buffer is overwritten — a
+    prefilled state's tail past the prompt is zeros, so a reused slot
+    carries no bits from its previous occupant."""
+    import jax
+
+    out = dict(pool)
+    out["layers"] = [
+        {pi: jax.tree.map(lambda p, r: _leaf_write(p, r, slot, 1),
+                          pool_seg[pi], state_seg[pi])
+         for pi in pool_seg}
+        for pool_seg, state_seg in zip(pool["layers"], state["layers"])
+    ]
+    if "enc_out" in pool:
+        out["enc_out"] = _leaf_write(pool["enc_out"], state["enc_out"],
+                                     slot, 0)
+    return out
+
+
+def read_slot(pool, slot: int):
+    """The batch-1 serving-state view of one slot (gather; the inverse of
+    :func:`write_slot`)."""
+    import jax
+
+    out = dict(pool)
+    out["layers"] = [
+        {pi: jax.tree.map(lambda p: p[:, slot:slot + 1], seg[pi])
+         for pi in seg}
+        for seg in pool["layers"]
+    ]
+    if "enc_out" in pool:
+        out["enc_out"] = pool["enc_out"][slot:slot + 1]
+    return out

@@ -332,6 +332,31 @@ class Session:
         return GenerateResult(tokens=gen, seconds=dt,
                               tokens_per_s=batch * gen_len / dt)
 
+    # -- serving (continuous batching) -------------------------------------
+
+    def serving_engine(self, tiers=None, *, slots: int = 4,
+                       max_len: int = 64, clock=None, aging=None):
+        """A continuous-batching :class:`repro.serving.Engine` over this
+        session's resident weights: one KV-slot pool + one resident
+        compiled decode per accuracy tier, requests joining mid-decode
+        (design: ``docs/serving.md``).
+
+        ``tiers`` is a sequence of :class:`repro.serving.TierSpec`
+        (default: the premium/standard/bulk SLA ladder); each tier's
+        ``policy`` goes through the same coercion as ``Session(policy=...)``.
+        Continuous batching never changes a request's numerics — every
+        request's tokens are bit-identical to a solo :meth:`generate` of
+        the same prompt under that tier's policy.
+        """
+        if self._family != "lm":
+            raise SessionError("serving_engine() is the LM entry point; "
+                               "ResNet sessions have no decode loop")
+        from repro.serving import DEFAULT_TIERS, Engine
+
+        tiers = DEFAULT_TIERS if tiers is None else tuple(tiers)
+        return Engine.from_session(self, tiers, slots=slots, max_len=max_len,
+                                   clock=clock, aging=aging)
+
     # -- auto-configuration (the sweep) ------------------------------------
 
     def auto_configure(self, budget: float, calib=None, candidates=None,
@@ -480,6 +505,27 @@ def _add_common(ap):
                     help="use the full arch config (default: reduced)")
 
 
+def parse_tiers(spec: str):
+    """``name:policy,name:policy`` -> TierSpec tuple (priority = listed
+    order; policy is a preset name or a policy-JSON path).  The wire
+    format of ``python -m repro.session serve-loop --tiers``."""
+    from repro.serving import TierSpec
+
+    tiers = []
+    for i, part in enumerate(p for p in spec.split(",") if p.strip()):
+        name, _, pol = part.partition(":")
+        if not name.strip() or not pol.strip():
+            raise SessionError(f"bad tier spec {part.strip()!r}: expected "
+                               f"name:policy (e.g. premium:exact)")
+        if any(t.name == name.strip() for t in tiers):
+            raise SessionError(f"duplicate tier {name.strip()!r} in --tiers")
+        tiers.append(TierSpec(name.strip(), pol.strip(), priority=i))
+    if not tiers:
+        raise SessionError(f"empty tier spec {spec!r}: expected "
+                           f"name:policy[,name:policy...]")
+    return tuple(tiers)
+
+
 def print_ppa_report(ppa: dict, tag: str = "session") -> None:
     """One-line human summary of a ``Session.ppa_report`` dict (shared by
     the session and serve CLIs so the two never drift)."""
@@ -505,6 +551,28 @@ def build_parser() -> argparse.ArgumentParser:
     g.add_argument("--batch", type=int, default=4)
     g.add_argument("--prompt-len", type=int, default=32)
     g.add_argument("--gen-len", type=int, default=16)
+
+    sl = sub.add_parser(
+        "serve-loop",
+        help="continuous-batching serving demo: a synthetic mixed-tier "
+             "workload decodes on one resident weight set (per-tier "
+             "accuracy policies; see docs/serving.md)")
+    _add_common(sl)
+    sl.add_argument("--tiers", default="premium:exact,bulk:segmented1",
+                    help="comma list of name:policy tiers, priority in "
+                         "listed order (policy: preset name or policy-JSON "
+                         "path; overrides --policy per lane)")
+    sl.add_argument("--requests", type=int, default=8,
+                    help="synthetic workload size (round-robin over tiers)")
+    sl.add_argument("--slots", type=int, default=4,
+                    help="KV-pool slots per tier")
+    sl.add_argument("--max-len", type=int, default=64,
+                    help="pooled KV-cache length per slot")
+    sl.add_argument("--prompt-len", type=int, default=16)
+    sl.add_argument("--gen-len", type=int, default=16)
+    sl.add_argument("--aging", type=float, default=None,
+                    help="scheduler aging bound in seconds (starvation "
+                         "freedom; default: off)")
 
     a = sub.add_parser("auto-configure",
                        help="budget-driven per-layer numerics sweep "
@@ -551,6 +619,39 @@ def main(argv=None) -> int:
             print(f"[session] {args.arch}: {res.tokens.shape[0]}x"
                   f"{res.tokens.shape[1]} tokens in {res.seconds:.2f}s "
                   f"({res.tokens_per_s:.1f} tok/s)")
+        elif args.cmd == "serve-loop":
+            from repro.serving import ServingError
+
+            tiers = parse_tiers(args.tiers)
+            try:
+                eng = sess.serving_engine(tiers, slots=args.slots,
+                                          max_len=args.max_len,
+                                          aging=args.aging)
+                rng = np.random.default_rng(args.seed)
+                for i in range(args.requests):
+                    spec = tiers[i % len(tiers)]
+                    plen = int(rng.integers(max(2, args.prompt_len // 2),
+                                            args.prompt_len + 1))
+                    eng.submit(rng.integers(0, sess.config.vocab, plen),
+                               tier=spec.name,
+                               max_new_tokens=args.gen_len)
+                t0 = time.perf_counter()
+                stats = eng.run()
+                dt = time.perf_counter() - t0
+            except ServingError as e:
+                raise SessionError(str(e)) from e
+            total = sum(s.n_tokens for s in stats.values())
+            print(f"[serve-loop] {args.arch}: {args.requests} requests, "
+                  f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s "
+                  f"aggregate)")
+            for spec in tiers:
+                s = stats[spec.name]
+                print(f"[serve-loop]   {spec.name} ({spec.policy}): "
+                      f"{s.n_finished} finished, {s.n_tokens} tokens, "
+                      f"{s.n_decode_steps} decode steps, mean batch "
+                      f"{s.mean_occupancy:.2f}")
+                print_ppa_report(sess.replace(policy=spec.policy).ppa_report(),
+                                 tag=f"tier:{spec.name}")
         elif args.cmd == "auto-configure":
             res = sess.auto_configure(args.budget, method=args.method,
                                       candidates=args.candidates, verbose=True)

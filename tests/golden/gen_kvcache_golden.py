@@ -1,0 +1,98 @@
+"""Golden-vector generator: KV-pool scatter/gather vs a dense reference.
+
+An independent reference implementation of the slot-boundary data
+movement in ``repro.serving.kvcache`` — plain numpy slice assignment on
+dense arrays, deliberately sharing NO code with ``write_slot`` /
+``read_slot`` (which go through ``jnp.take`` + ``.at[...].set``).  The
+synthetic pool mimics the transformer serving-state pytree: a ``layers``
+list of per-phase leaf dicts with the slot axis at 1 (leaves are stacked
+``(repeats, slot, max_len, ...)``) plus an ``enc_out`` leaf with the slot
+axis at 0.
+
+The fixture pins CRC32 checksums of every pool leaf after a scripted
+sequence of slot writes (including an overwrite of an occupied slot — the
+no-stale-bits property) and of every gathered leaf of each slot read.
+The consuming test (``tests/test_kvcache.py``) rebuilds the same inputs,
+replays the script through the real scatter/gather, and compares
+checksums — bit-exact, no tolerance.
+
+Run from the repo root to regenerate ``tests/golden/kvcache_golden.json``:
+
+    python tests/golden/gen_kvcache_golden.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+
+import numpy as np
+
+N_SLOTS = 3
+MAX_LEN = 6
+
+#: leaf path -> full pool shape.  ``layers.{i}.{phase}.{name}`` leaves
+#: carry the slot axis at 1; ``enc_out`` at 0.  Shapes are deliberately
+#: heterogeneous (attention-like 4-D, conv/ssm-like 3-D and 4-D ranks).
+LEAVES = {
+    "layers.0.0.k": (2, N_SLOTS, MAX_LEN, 4),
+    "layers.0.0.v": (2, N_SLOTS, MAX_LEN, 4),
+    "layers.1.0.conv": (1, N_SLOTS, 3, 2),
+    "layers.1.0.state": (1, N_SLOTS, 2, 3, 2),
+    "enc_out": (N_SLOTS, 4, 2),
+}
+
+#: (slot, state_seed) per write, in order.  Slot 1 is written twice: the
+#: second write must fully overwrite the first occupant's bits.
+SCRIPT = [(1, 10), (0, 11), (1, 12)]
+
+
+def leaf_values(path: str, shape, seed: int) -> np.ndarray:
+    """Deterministic float32 content per (leaf path, seed) — the same
+    recipe the consuming test uses, so generator and test agree on inputs
+    without sharing code with the implementation under test."""
+    rng = np.random.default_rng(zlib.crc32(path.encode()) + seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def request_shape(path: str, shape):
+    """The batch-1 (single-request) version of a pool leaf shape."""
+    axis = 0 if path == "enc_out" else 1
+    return tuple(1 if i == axis else d for i, d in enumerate(shape))
+
+
+def crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a, np.float32).tobytes())
+
+
+def main() -> dict:
+    pool = {p: leaf_values(p, s, seed=0) for p, s in sorted(LEAVES.items())}
+    for slot, sseed in SCRIPT:
+        for p, s in sorted(LEAVES.items()):
+            src = leaf_values(p, request_shape(p, s), seed=sseed)
+            if p == "enc_out":
+                pool[p][slot] = src[0]          # dense reference scatter
+            else:
+                pool[p][:, slot] = src[:, 0]
+    reads = {}
+    for slot in range(N_SLOTS):
+        for p in sorted(LEAVES):
+            got = (pool[p][slot:slot + 1] if p == "enc_out"
+                   else pool[p][:, slot:slot + 1])   # dense reference gather
+            reads[f"slot{slot}.{p}"] = crc(got)
+    return {
+        "n_slots": N_SLOTS,
+        "max_len": MAX_LEN,
+        "leaves": {p: list(s) for p, s in sorted(LEAVES.items())},
+        "script": [list(op) for op in SCRIPT],
+        "pool_crc": {p: crc(a) for p, a in pool.items()},
+        "read_crc": reads,
+    }
+
+
+if __name__ == "__main__":
+    out = os.path.join(os.path.dirname(__file__), "kvcache_golden.json")
+    with open(out, "w") as f:
+        json.dump(main(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out}")

@@ -1,0 +1,110 @@
+"""Deterministic simulation rig for the serving engine.
+
+The engine's scheduling/batching/slot logic is model-agnostic behind the
+``ModelRunner`` duck type (``repro.serving.engine``), so it can be driven
+here by :class:`StubRunner` — a pure-Python "language model" whose next
+token is a hash of ``(prompt bytes, absolute position)`` — with zero jax
+compilation.  That makes every engine behaviour (admission order,
+mid-decode joins, retirement, slot reuse, starvation-freedom) assertable
+in milliseconds, and the hash's key property drives the invariance tests:
+the token stream depends ONLY on the request's own prompt and position,
+never on which slot it landed in or who shared the batch — exactly the
+bit-exactness contract the real ``TransformerRunner`` is proven to honor
+in ``tests/test_serving_numerics.py``.
+
+Time is a :class:`repro.serving.FakeClock` advanced by the script, so
+aging/starvation behaviour is exact, not wall-clock-flaky.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from repro.serving import Engine, FakeClock, TierSpec
+
+
+def stub_token(prompt: np.ndarray, pos: int, vocab: int = 97) -> int:
+    """The stub LM: next token after absolute position ``pos`` given
+    ``prompt`` — a pure function of (prompt, pos), slot/batch-agnostic."""
+    h = zlib.crc32(np.asarray(prompt, np.int32).tobytes())
+    return int((h + 2654435761 * (pos + 1)) % vocab)
+
+
+def stub_reference(prompt, n: int, vocab: int = 97) -> np.ndarray:
+    """The solo-generate reference: ``n`` greedy tokens for ``prompt``.
+    Token k conditions through absolute position ``len(prompt) - 1 + k``
+    (k=0 is the prefill token), mirroring the engine's position
+    bookkeeping."""
+    prompt = np.asarray(prompt, np.int32)
+    L = prompt.shape[0]
+    return np.asarray([stub_token(prompt, L - 1 + k, vocab)
+                       for k in range(n)], np.int32)
+
+
+class StubRunner:
+    """A ``ModelRunner`` with no model: per-slot state is just the
+    request's prompt, and decode hashes (prompt, pos) per active slot.
+    Records every prefill/decode call for white-box assertions."""
+
+    def __init__(self, n_slots: int = 4, max_len: int = 64, vocab: int = 97):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.vocab = vocab
+        self.slots = {}                 # slot -> prompt array
+        self.prefill_calls = []         # list of prompt copies
+        self.decode_calls = []          # list of (tokens, pos) copies
+
+    def prefill(self, prompt):
+        prompt = np.asarray(prompt, np.int32)
+        self.prefill_calls.append(prompt.copy())
+        return (stub_token(prompt, prompt.shape[0] - 1, self.vocab),
+                {"prompt": prompt.copy()})
+
+    def write_slot(self, slot: int, state) -> None:
+        self.slots[slot] = state["prompt"]
+
+    def decode(self, tokens, pos):
+        tokens = np.asarray(tokens, np.int32)
+        pos = np.asarray(pos, np.int32)
+        self.decode_calls.append((tokens.copy(), pos.copy()))
+        out = np.zeros(self.n_slots, np.int32)
+        for slot, prompt in self.slots.items():
+            out[slot] = stub_token(prompt, int(pos[slot]), self.vocab)
+        return out
+
+
+def make_stub_engine(tiers=(TierSpec("a"),), slots: int = 2,
+                     max_len: int = 64, aging=None):
+    """One stub lane per tier -> (engine, clock, {tier: StubRunner})."""
+    clock = FakeClock()
+    runners = {t.name: StubRunner(n_slots=slots, max_len=max_len)
+               for t in tiers}
+    eng = Engine(runners, tiers, clock=clock, aging=aging)
+    return eng, clock, runners
+
+
+def run_scripted(eng: Engine, clock: FakeClock, script,
+                 dt: float = 1.0, max_steps: int = 10_000):
+    """Drive the engine through a scripted arrival schedule.
+
+    ``script`` is an iterable of per-step submission lists: at step i the
+    clock advances by ``dt``, every kwargs dict in ``script[i]`` is
+    submitted, then the engine steps once.  After the script runs out the
+    engine drains (still advancing the clock).  Returns
+    ``(requests, events)`` in submission/emission order.
+    """
+    reqs, events = [], []
+    for submits in script:
+        clock.advance(dt)
+        for kw in submits:
+            reqs.append(eng.submit(**kw))
+        events.extend(eng.step())
+    steps = 0
+    while not eng.idle:
+        if steps >= max_steps:
+            raise AssertionError(f"engine did not drain in {max_steps} steps")
+        clock.advance(dt)
+        events.extend(eng.step())
+        steps += 1
+    return reqs, events

@@ -163,6 +163,50 @@ def test_session_generate_reuses_compiled_functions():
     assert len(s._jit_cache) == 2          # new max_len: new entry
 
 
+@pytest.fixture(scope="module")
+def gen_session():
+    """One compiled session shared by the generate(prompts=...) tests."""
+    return Session("qwen3-4b", policy="segmented1")
+
+
+def test_session_generate_explicit_prompts_win_over_shape_args(gen_session,
+                                                               rng):
+    """``prompts`` overrides batch/prompt_len (taken from the array), and
+    a plain nested list is accepted."""
+    P = rng.integers(0, gen_session.config.vocab, (3, 6))
+    res = gen_session.generate(prompts=P, gen_len=2, batch=99, prompt_len=99)
+    assert res.tokens.shape == (3, 2)
+    res_list = gen_session.generate(prompts=P.tolist(), gen_len=2)
+    np.testing.assert_array_equal(res.tokens, res_list.tokens)
+
+
+def test_session_generate_left_padded_prompts_pinned(gen_session, rng):
+    """Ragged-intent batches are served LEFT-PADDED by the caller, and the
+    pad is an ordinary vocab token: no pad masking, so each row's tokens
+    equal a solo run of the same literal padded row (rows are
+    independent).  Pinned: callers who pad must pad the solo reference
+    identically to reproduce batched results."""
+    vocab = gen_session.config.vocab
+    short = rng.integers(1, vocab, 3)
+    long = rng.integers(1, vocab, 6)
+    P = np.stack([np.concatenate([np.zeros(3, np.int64), short]), long])
+    batched = gen_session.generate(prompts=P, gen_len=3)
+    for row in range(2):
+        solo = gen_session.generate(prompts=P[row:row + 1], gen_len=3)
+        np.testing.assert_array_equal(batched.tokens[row], solo.tokens[0])
+
+
+def test_session_generate_result_stats_contract(gen_session, rng):
+    P = rng.integers(0, gen_session.config.vocab, (2, 4))
+    res = gen_session.generate(prompts=P, gen_len=4)
+    assert isinstance(res, GenerateResult)
+    assert res.tokens.shape == (2, 4) and res.tokens.dtype == np.int32
+    assert (0 <= res.tokens).all() and (res.tokens <
+                                        gen_session.config.vocab).all()
+    assert res.seconds > 0
+    assert res.tokens_per_s == pytest.approx(2 * 4 / res.seconds)
+
+
 # ---------------------------------------------------------------------------
 # resnet sessions + auto-configuration (the sweep)
 # ---------------------------------------------------------------------------
@@ -204,6 +248,24 @@ def test_session_resnet_auto_configure_adopts_policy():
     assert measured <= budget
     with pytest.raises(SessionError, match="calibration image batch"):
         Session.from_resnet(cfg, params, state).auto_configure(budget)
+
+
+# ---------------------------------------------------------------------------
+# serving tiers (the serve-loop CLI's --tiers spec)
+# ---------------------------------------------------------------------------
+
+def test_parse_tiers_spec():
+    from repro.session import parse_tiers
+
+    tiers = parse_tiers("premium:exact,bulk:segmented1")
+    assert [(t.name, t.policy, t.priority) for t in tiers] == \
+        [("premium", "exact", 0), ("bulk", "segmented1", 1)]
+    with pytest.raises(SessionError, match="tier spec"):
+        parse_tiers("premium")          # missing :policy
+    with pytest.raises(SessionError, match="tier spec"):
+        parse_tiers("")
+    with pytest.raises(SessionError, match="duplicate tier"):
+        parse_tiers("a:exact,a:segmented1")
 
 
 # ---------------------------------------------------------------------------

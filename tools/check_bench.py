@@ -44,6 +44,9 @@ TOLERANCES: dict[str, float] = {
     # p1 is the cheapest segmented variant; its ratio to the exact matmul
     # sits near 1 and wobbles the most on loaded CI machines
     "kern_seg_matmul_p1_vs_exact": 0.75,
+    # host-python scheduling overhead vs jitted decode shifts with CI load,
+    # so the engine/solo balance wobbles more than pure-kernel ratios
+    "serving_vs_solo_generate": 0.75,
 }
 
 
