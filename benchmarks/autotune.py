@@ -1,0 +1,183 @@
+"""Autotune driver: measure the kernel block-size candidate grids on
+THIS host and persist the winners as a versioned tuning artifact.
+
+    python -m benchmarks.autotune [--out PATH] [--fast] [--iters N]
+                                  [--kernels matmul,ssd] [--backends ...]
+                                  [--buckets small,medium]
+
+Per ``(kernel, backend, shape bucket)`` the sweep times every candidate
+block through ``benchmarks.harness.measure`` (warmup excluded, every
+iteration synced, median-of-k — the same contract as every other
+benchmark number) on a representative problem of that bucket, and
+writes the winners to ``kernels/TUNE_<device_kind>.json`` (schema
+``repro-tune/1``, atomic write).  ``dispatch`` consults the artifact
+once activated — via ``--tune`` on any benchmark entry point,
+``Session(tune=...)``, or the ``REPRO_TUNE_FILE`` env var — and falls
+back to the static tables otherwise.  Tuning NEVER runs implicitly
+inside a jitted hot path; this driver is the only place measurements
+happen.
+
+Backends are swept only where they can run (``pallas`` needs a TPU
+host; CPU artifacts cover ``interpret`` + ``xla``).  ``--fast`` trims
+buckets, problem sizes, and iteration counts for the CI leg; the
+artifact records the mode so ``tools/check_bench.py`` never diffs a
+fast sweep against a full one unnoticed.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):  # executed as a script
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.harness import environment_meta, measure  # noqa: E402
+from repro.kernels import autotune, dispatch  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Representative max extent per bucket (the measured problem's size).
+#: ``fast`` uses each bucket's low end so the CI sweep stays cheap while
+#: every measurement is still genuinely inside its bucket; ``interpret``
+#: problems are scaled down further below (the interpreter simulates the
+#: kernel body, so absolute cost is orders of magnitude above xla).
+BUCKET_SIZES = {"small": 256, "medium": 512, "large": 1536}
+FAST_BUCKET_SIZES = {"small": 128, "medium": 288, "large": 1056}
+INTERPRET_SIZES = {"small": 64, "medium": 288, "large": 1056}
+
+
+def _available_backends():
+    import jax
+
+    return ("pallas", "interpret", "xla") if jax.default_backend() == "tpu" \
+        else ("interpret", "xla")
+
+
+def make_measure_fn(*, iters: int, warmup: int = 1, sizes=None,
+                    interpret_sizes=None, seed: int = 0):
+    """The ``autotune.sweep`` measure hook: builds one representative
+    problem per (kernel, backend, bucket) and times a jitted call of the
+    dispatch entry point with the candidate block forced."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.afpm import AFPMConfig
+
+    rng = np.random.default_rng(seed)
+    sizes = dict(sizes or BUCKET_SIZES)
+    interpret_sizes = dict(interpret_sizes or INTERPRET_SIZES)
+    cache = {}
+
+    def problem(kernel, backend, bucket):
+        size = (interpret_sizes if backend == "interpret" else sizes)[bucket]
+        key = (kernel, backend, bucket)
+        if key in cache:
+            return cache[key]
+        if kernel == "matmul":
+            ops = (jnp.asarray(rng.standard_normal((size, size)), jnp.float32),
+                   jnp.asarray(rng.standard_normal((size, size)), jnp.float32))
+        elif kernel == "bitwise":
+            n = size * size
+            ops = (jnp.asarray(rng.standard_normal(n), jnp.float32),
+                   jnp.asarray(rng.standard_normal(n), jnp.float32))
+        else:  # ssd: (L, H, P) scan, small state so the chunk dominates
+            L, H, P, N = size, 2, 16, 8
+            ops = (jnp.asarray(rng.standard_normal((L, H, P)), jnp.float32),
+                   jnp.asarray(rng.uniform(0.01, 0.2, (L, H)), jnp.float32),
+                   jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32),
+                   jnp.asarray(rng.standard_normal((L, N)), jnp.float32),
+                   jnp.asarray(rng.standard_normal((L, N)), jnp.float32))
+        cache[key] = (size, ops)
+        return cache[key]
+
+    def measure_fn(kernel, backend, bucket, block, size_hint):
+        del size_hint  # the sweep passes the clip extent; we sized above
+        size, operands = problem(kernel, backend, bucket)
+        if kernel == "matmul":
+            fn = jax.jit(lambda a, b: dispatch.matmul(
+                a, b, 3, backend=backend, block_sizes=tuple(block)))
+        elif kernel == "bitwise":
+            cfg = AFPMConfig(n=5)
+            fn = jax.jit(lambda a, b: dispatch.multiply(
+                a, b, cfg, backend=backend, block=tuple(block)))
+        else:
+            fn = jax.jit(lambda *a: dispatch.ssd(
+                *a, chunk=int(block), backend=backend))
+        return measure(fn, *operands, iters=iters, warmup=warmup).median_us
+
+    return measure_fn
+
+
+def clip_sizes(fast: bool):
+    """(bucket -> clip extent) handed to the sweep so candidates larger
+    than the measured problem are dropped, per backend handled inside
+    the measure hook."""
+    return dict(FAST_BUCKET_SIZES if fast else BUCKET_SIZES)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="measure kernel block-size candidates on this host "
+                    "and write the TUNE_<device>.json artifact")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="artifact path (default: "
+                         "kernels/TUNE_<device_kind>.json in the repo)")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI sweep: small/medium buckets only, low-end "
+                         "problem sizes, fewer timing iterations")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timing iterations per candidate (default: 3, "
+                         "2 with --fast)")
+    ap.add_argument("--kernels", default=",".join(autotune.KERNELS),
+                    help="comma list of kernels to sweep")
+    ap.add_argument("--backends", default=None,
+                    help="comma list of backends (default: every backend "
+                         "this host can run)")
+    ap.add_argument("--buckets", default=None,
+                    help="comma list of shape buckets (default: "
+                         "small,medium with --fast, all three otherwise)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    kernels = tuple(k for k in args.kernels.split(",") if k)
+    backends = (tuple(b for b in args.backends.split(",") if b)
+                if args.backends else _available_backends())
+    if args.buckets:
+        buckets = tuple(b for b in args.buckets.split(",") if b)
+    else:
+        buckets = ("small", "medium") if args.fast else autotune.BUCKETS
+    iters = args.iters if args.iters is not None else (2 if args.fast else 3)
+
+    sizes = clip_sizes(args.fast)
+    interp = ({"small": 64, "medium": 160, "large": 1056} if args.fast
+              else INTERPRET_SIZES)
+    meta = environment_meta()
+    meta["fast"] = args.fast
+    meta["iters"] = iters
+    meta["sizes"] = {b: sizes[b] for b in buckets}
+
+    measure_fn = make_measure_fn(iters=iters, sizes=sizes,
+                                 interpret_sizes=interp, seed=args.seed)
+    try:
+        table = autotune.sweep(measure_fn, kernels=kernels, backends=backends,
+                               buckets=buckets, sizes=sizes, meta=meta,
+                               verbose=True)
+    except autotune.TuneError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    out = args.out or os.path.join(
+        REPO, "kernels", autotune.artifact_name(table.device))
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    table.save(out)
+    print(f"[autotune] wrote {out} ({len(table.entries)} entries, device "
+          f"{table.device}, schema {autotune.SCHEMA}); activate with "
+          f"--tune {out} on any benchmark entry point, Session(tune=...), "
+          f"or {autotune.ENV_VAR}={out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

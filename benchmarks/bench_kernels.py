@@ -14,16 +14,16 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from .harness import BenchReport
+    from .harness import BenchReport, module_main
 except ImportError:  # run as a script: python benchmarks/<module>.py
     import os
     import sys
 
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.harness import BenchReport
+    from benchmarks.harness import BenchReport, module_main
 from repro.core.afpm import AFPMConfig
 from repro.core.numerics import segmented_matmul_xla
-from repro.kernels import ops
+from repro.kernels import autotune, dispatch, ops
 
 
 
@@ -74,8 +74,29 @@ def run(report: BenchReport | None = None):
     us = report.record("kern_ssd_scan", f, xs, dt, A, B, C,
                        derived={"L": L, "H": H, "P": P}).median_us
     print(f"{'ssd_scan %dx%dx%d (chunked)' % (L, H, P):28s} {us:10.1f} us")
+
+    # autotuner probe: the default-chunk path (tuned table first, static
+    # fallback — what production callers get) vs the static-table chunk
+    # forced explicitly.  With a tuned artifact active the ratio asserts
+    # the measured winner is no slower than the guessed tile; with none,
+    # both sides are the same chunk and the ratio pins near 1.
+    chunk_tuned = dispatch.scan_chunk("xla", L)
+    chunk_static = dispatch.SCAN_CHUNKS[("xla", dispatch.shape_bucket(L))]
+    f_static = jax.jit(
+        lambda *a: ops.ssd_scan(*a, chunk=chunk_static, backend="xla"))
+    us_static = report.record(
+        "kern_ssd_scan_static_chunk", f_static, xs, dt, A, B, C,
+        derived={"chunk": chunk_static}).median_us
+    ratio = us / us_static
+    report.add("autotuned_vs_static", ratio, "ratio",
+               derived={"kernel": "ssd", "backend": "xla",
+                        "chunk_tuned": chunk_tuned,
+                        "chunk_static": chunk_static,
+                        "tune": autotune.active_source()})
+    print(f"{'autotuned vs static (ssd)':28s} {ratio:10.2f} x "
+          f"(chunk {chunk_tuned} vs {chunk_static})")
     return report
 
 
 if __name__ == "__main__":
-    run()
+    module_main(run)

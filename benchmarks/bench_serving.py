@@ -22,13 +22,13 @@ from __future__ import annotations
 import numpy as np
 
 try:
-    from .harness import BenchReport, measure
+    from .harness import BenchReport, measure, module_main
 except ImportError:  # run as a script: python benchmarks/<module>.py
     import os
     import sys
 
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.harness import BenchReport, measure
+    from benchmarks.harness import BenchReport, measure, module_main
 from repro.session import Session
 from repro.serving import TierSpec
 
@@ -110,4 +110,4 @@ def run(report: BenchReport | None = None):
 
 
 if __name__ == "__main__":
-    run()
+    module_main(run)

@@ -115,10 +115,15 @@ class BenchReport:
     """
 
     def __init__(self, *, fast: bool = False, iters: int | None = None):
+        from repro.kernels import autotune
+
         self.fast = fast
         self.default_iters = iters if iters is not None else (3 if fast else 5)
         self.meta = environment_meta()
         self.meta["fast"] = fast
+        # which measured tuning artifact (if any) shaped the kernel block
+        # sizes behind these numbers — None means the static tables
+        self.meta["tune"] = autotune.active_source()
         self.metrics: dict[str, dict] = {}
 
     def add(self, name: str, value: float, unit: str, *,
@@ -144,12 +149,56 @@ class BenchReport:
         return {"schema": SCHEMA, "meta": self.meta, "metrics": self.metrics}
 
     def write(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
-            f.write("\n")
+        """Atomic artifact write (temp file + ``os.replace``): an
+        interrupted run must never leave a truncated ``BENCH_*.json``
+        behind for ``check_bench`` to trip over."""
+        path = os.fspath(path)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
 
     def csv_rows(self):
         """Legacy ``name,value,derived`` summary rows (stdout contract)."""
         for name, m in self.metrics.items():
             derived = ";".join(f"{k}={v}" for k, v in m["derived"].items())
             yield name, m["value"], m["unit"], derived
+
+
+def activate_tuning(path: str | None = None):
+    """Activate a measured kernel-tuning artifact for this process (the
+    shared ``--tune`` knob of every benchmark entry point).  ``None``
+    falls back to the ``REPRO_TUNE_FILE`` env var; with neither, the
+    static dispatch tables stay in effect.  Returns the active table (or
+    None) so callers can report what they run under."""
+    from repro.kernels import autotune
+
+    return autotune.activate(path)
+
+
+def module_main(run_fn, argv=None, **fixed_kwargs):
+    """Shared standalone entry point for the benchmark modules: every
+    ``python -m benchmarks.<module>`` accepts the same ``--fast`` /
+    ``--iters`` / ``--tune`` defaults as the full driver, so a single
+    section can be re-measured under exactly the conditions CI uses."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=run_fn.__module__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI subset: fewer timing iterations / smaller sizes")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="override the per-metric timing iteration count")
+    ap.add_argument("--tune", default=None, metavar="TUNE_JSON",
+                    help="measured kernel-tuning artifact to activate "
+                         "(default: REPRO_TUNE_FILE env var, else the "
+                         "static tables)")
+    args = ap.parse_args(argv)
+    activate_tuning(args.tune)
+    report = BenchReport(fast=args.fast, iters=args.iters)
+    run_fn(report, **fixed_kwargs)
+    return report

@@ -12,13 +12,13 @@ import json
 import os
 
 try:
-    from .harness import BenchReport
+    from .harness import BenchReport, module_main
 except ImportError:  # run as a script: python benchmarks/<module>.py
     import os
     import sys
 
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.harness import BenchReport
+    from benchmarks.harness import BenchReport, module_main
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
 
@@ -95,6 +95,6 @@ def markdown_table(mesh: str = "16x16") -> str:
 
 
 if __name__ == "__main__":
-    run()
+    rep = module_main(run)  # single-pod mesh, shared --fast/--iters/--tune
     print()
-    run(mesh="2x16x16")
+    run(BenchReport(fast=rep.fast, iters=rep.default_iters), mesh="2x16x16")

@@ -35,12 +35,25 @@ def main(argv=None) -> None:
                     metavar="PATH",
                     help="write the BENCH_*.json artifact here "
                          "(default: BENCH_<host>.json in the cwd)")
+    ap.add_argument("--tune", default=None, metavar="TUNE_JSON",
+                    help="measured kernel-tuning artifact to activate for "
+                         "the whole run (kernels/TUNE_<device>.json; "
+                         "generate with python -m benchmarks.autotune). "
+                         "Default: the REPRO_TUNE_FILE env var if set, "
+                         "else the static tuning tables")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_kernels, bench_serving, roofline,
                             table2_ppa, table3_image)
-    from benchmarks.harness import BenchReport
+    from benchmarks.harness import BenchReport, activate_tuning
 
+    table = activate_tuning(args.tune)
+    if table is not None:
+        from repro.kernels import autotune
+
+        print(f"[bench] tuned kernel table active: "
+              f"{autotune.active_source()} ({len(table.entries)} entries, "
+              f"device {table.device})")
     report = BenchReport(fast=args.fast, iters=args.iters)
     table2_ppa.run(report)
     table3_image.run(report)

@@ -12,13 +12,13 @@ is informational (see docs/benchmarks.md).
 from __future__ import annotations
 
 try:
-    from .harness import BenchReport
+    from .harness import BenchReport, module_main
 except ImportError:  # run as a script: python benchmarks/<module>.py
     import os
     import sys
 
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.harness import BenchReport
+    from benchmarks.harness import BenchReport, module_main
 from repro.core import ppa
 
 
@@ -79,4 +79,4 @@ def run(report: BenchReport | None = None):
 
 
 if __name__ == "__main__":
-    run()
+    module_main(run)

@@ -16,13 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from .harness import BenchReport
+    from .harness import BenchReport, module_main
 except ImportError:  # run as a script: python benchmarks/<module>.py
     import os
     import sys
 
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.harness import BenchReport
+    from benchmarks.harness import BenchReport, module_main
 from repro.core.metrics import psnr
 from repro.core.registry import get_multiplier
 from repro.data.synthetic import gray_images
@@ -109,4 +109,4 @@ def run(report: BenchReport | None = None, n_images: int = 3, size: int = 128):
 
 
 if __name__ == "__main__":
-    run()
+    module_main(run)

@@ -202,9 +202,21 @@ if __name__ == "__main__":
                          "greedy: full-network eval per candidate assignment")
     ap.add_argument("--out", default=None, help="write the policy JSON here")
     ap.add_argument("--train-steps", type=int, default=120)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI subset: fewer timing iterations")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="override the per-metric timing iteration count")
+    ap.add_argument("--tune", default=None, metavar="TUNE_JSON",
+                    help="measured kernel-tuning artifact to activate "
+                         "(default: REPRO_TUNE_FILE env var, else the "
+                         "static tables)")
     args = ap.parse_args()
+    from benchmarks.harness import activate_tuning
+
+    activate_tuning(args.tune)
     if args.auto is not None:
         run_auto(budget=args.auto, candidates=args.candidates, out=args.out,
                  train_steps=args.train_steps, method=args.method)
     else:
-        run()
+        run(BenchReport(fast=args.fast, iters=args.iters),
+            train_steps=args.train_steps)

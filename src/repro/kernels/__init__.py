@@ -10,8 +10,12 @@ Layering:
   compat.py    — JAX-version shim (CompilerParams / BlockSpec drift);
                  the only place allowed to touch ``pltpu.*CompilerParams``
   dispatch.py  — backend resolution (auto | pallas | interpret | xla) and
-                 per-kernel block-size tuning tables keyed on
-                 (backend, shape bucket); the audited entry points
+                 per-kernel block-size lookups (measured autotuner table
+                 first, static (backend, shape bucket) fallback); the
+                 audited entry points
+  autotune.py  — measure-and-cache block-size autotuner: versioned
+                 ``TUNE_<device>.json`` artifacts, explicit activation,
+                 swept out-of-band via ``python -m benchmarks.autotune``
   ref.py       — pure-jnp oracles defining each kernel's exact semantics
   ops.py       — jit'd public wrappers the model zoo calls
 
@@ -19,6 +23,6 @@ Tests validate the kernel bodies in ``interpret`` mode on CPU and pin
 them against ``ref.py``; ``NumericsConfig.backend`` selects the backend
 end-to-end.
 """
-from . import compat, dispatch, ops, ref
+from . import autotune, compat, dispatch, ops, ref
 
-__all__ = ["compat", "dispatch", "ops", "ref"]
+__all__ = ["autotune", "compat", "dispatch", "ops", "ref"]

@@ -1,0 +1,391 @@
+"""Measure-and-cache kernel autotuner (replaces guessed tuning tables).
+
+The static ``(backend, shape bucket)`` tables in ``dispatch.py`` guess a
+block size once per bucket; serving throughput is decided by tile
+choices, and the right tile is a *measured* property of the device
+(cf. OpenACMv2's treatment of hardware parameters as measured, not
+assumed, quantities).  This module is the measured replacement:
+
+- :func:`sweep` times a small candidate grid of block sizes per
+  ``(kernel, backend, shape bucket)`` through an injected ``measure_fn``
+  (the ``benchmarks.harness.measure`` contract: a callable returning a
+  median-µs float) and records the winner per key;
+- the winners persist as a versioned JSON artifact
+  (``kernels/TUNE_<device_kind>.json``, schema :data:`SCHEMA`) written
+  atomically, so an interrupted sweep never leaves a corrupt table;
+- :func:`activate` installs a table process-wide; ``dispatch``'s
+  ``matmul_block_sizes`` / ``bitwise_block`` / ``scan_chunk`` consult it
+  through :func:`lookup` and fall back to the static tables when no
+  entry (or no table) exists.  A table tuned on a different
+  ``device_kind`` never applies — lookups ignore it entirely.
+
+Tuning is NEVER implicit: nothing in the jitted hot path measures
+anything.  The sweep runs out-of-band via ``python -m
+benchmarks.autotune`` (or programmatically), and activation is an
+explicit opt-in — the :data:`ENV_VAR` environment variable, the
+``Session(tune=...)`` knob, or a direct :func:`activate` call.  With no
+artifact activated, dispatch behavior is bit-identical to the static
+tables.
+
+``tools/check_bench.py --tune-fresh ...`` validates and diffs tuning
+artifacts so the perf CI can see tile-choice regressions (policy:
+``docs/benchmarks.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from typing import Callable, Mapping, Optional, Sequence
+
+#: Versioned schema tag written into every tuning artifact;
+#: loaders refuse tables whose tag does not match.
+SCHEMA = "repro-tune/1"
+
+#: Environment variable naming a tuning artifact to activate lazily on
+#: first lookup (explicit opt-in without touching code).
+ENV_VAR = "REPRO_TUNE_FILE"
+
+#: The tunable kernels and the shape buckets they are keyed on
+#: (buckets are ``dispatch.shape_bucket``'s).
+KERNELS = ("matmul", "bitwise", "ssd")
+BUCKETS = ("small", "medium", "large")
+
+
+class TuneError(Exception):
+    """Structured autotuner failure: bad artifact, bad key, bad grid."""
+
+
+def device_kind() -> str:
+    """The current host's accelerator kind, sanitized for filenames
+    (``TPU v4`` -> ``tpu_v4``, CPU hosts -> ``cpu``)."""
+    import jax
+
+    devices = jax.devices()
+    kind = devices[0].device_kind if devices else "none"
+    return _sanitize(kind)
+
+
+def _sanitize(kind: str) -> str:
+    return "_".join("".join(ch if ch.isalnum() else " " for ch in
+                            kind.lower()).split()) or "none"
+
+
+def artifact_name(device: Optional[str] = None) -> str:
+    """Default artifact filename for a device kind: ``TUNE_<device>.json``."""
+    return f"TUNE_{device or device_kind()}.json"
+
+
+def entry_key(kernel: str, backend: str, bucket: str) -> str:
+    """The table key ``kernel/backend/bucket`` (validated)."""
+    if kernel not in KERNELS:
+        raise TuneError(f"unknown kernel {kernel!r}; expected one of {KERNELS}")
+    if backend not in ("pallas", "interpret", "xla"):
+        raise TuneError(f"unknown backend {backend!r}; expected "
+                        f"pallas/interpret/xla")
+    if bucket not in BUCKETS:
+        raise TuneError(f"unknown bucket {bucket!r}; expected one of {BUCKETS}")
+    return f"{kernel}/{backend}/{bucket}"
+
+
+# -- candidate grids ---------------------------------------------------------
+#
+# Small grids bracketing the static defaults: the sweep stays cheap (a
+# handful of timed candidates per key) while covering the choices that
+# actually move throughput.  ``matmul`` blocks are (bm, bn, bk),
+# ``bitwise`` blocks (rows, cols), ``ssd`` a scalar chunk length.
+
+MATMUL_CANDIDATES = {
+    "pallas": {
+        "small": [(128, 128, 128), (128, 128, 256), (256, 256, 128)],
+        "medium": [(128, 128, 256), (256, 256, 256), (256, 256, 512)],
+        "large": [(256, 256, 256), (256, 256, 512), (512, 512, 512)],
+    },
+    "interpret": {
+        "small": [(16, 16, 16), (32, 32, 32), (64, 64, 64)],
+        "medium": [(32, 32, 32), (64, 64, 64), (128, 128, 128)],
+        "large": [(64, 64, 64), (128, 128, 128), (256, 256, 256)],
+    },
+}
+
+BITWISE_CANDIDATES = {
+    "pallas": {
+        "small": [(128, 256), (256, 256), (256, 512)],
+        "medium": [(256, 256), (256, 512), (512, 256)],
+        "large": [(256, 256), (512, 256), (512, 512)],
+    },
+    "interpret": {
+        "small": [(16, 64), (32, 64), (64, 64)],
+        "medium": [(32, 128), (64, 128), (128, 128)],
+        "large": [(64, 256), (128, 256), (256, 256)],
+    },
+}
+
+SSD_CANDIDATES = {
+    "pallas": {
+        "small": [64, 128, 256],
+        "medium": [64, 128, 256],
+        "large": [128, 256, 512],
+    },
+    "interpret": {
+        "small": [16, 32, 64],
+        "medium": [32, 64, 128],
+        "large": [64, 128, 256],
+    },
+    # the xla reference path is chunked too — its chunk is a real CPU
+    # tunable (the one the old dispatch hardcoded to 128)
+    "xla": {
+        "small": [32, 64, 128],
+        "medium": [64, 128, 256],
+        "large": [128, 256, 512],
+    },
+}
+
+_GRIDS = {"matmul": MATMUL_CANDIDATES, "bitwise": BITWISE_CANDIDATES,
+          "ssd": SSD_CANDIDATES}
+
+
+def tunable(kernel: str, backend: str) -> bool:
+    """Whether (kernel, backend) has a block-size knob at all (the xla
+    matmul/bitwise references take no blocks)."""
+    return kernel in _GRIDS and backend in _GRIDS[kernel]
+
+
+def candidates(kernel: str, backend: str, bucket: str,
+               max_extent: Optional[int] = None) -> list:
+    """The candidate blocks for one table key, optionally dropping
+    candidates whose every block dimension exceeds ``max_extent`` (a
+    block larger than the measured problem would be silently clipped by
+    the kernels, duplicating a smaller candidate's measurement)."""
+    entry_key(kernel, backend, bucket)  # validate names
+    if not tunable(kernel, backend):
+        raise TuneError(f"kernel {kernel!r} has no tunable block on the "
+                        f"{backend!r} backend")
+    grid = list(_GRIDS[kernel][backend][bucket])
+    if max_extent is not None:
+        def fits(block):
+            dims = block if isinstance(block, (tuple, list)) else (block,)
+            return all(d <= max_extent for d in dims)
+        kept = [b for b in grid if fits(b)]
+        grid = kept or grid[:1]  # never an empty grid
+    return grid
+
+
+# -- the table ---------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuningTable:
+    """One device's measured block-size winners.
+
+    ``entries`` maps :func:`entry_key` strings to
+    ``{"block": [...]|int, "median_us": float, "candidates": {...}}`` —
+    the winner plus every candidate's measured median, so an artifact
+    diff shows *why* a tile was chosen, not just that it changed.
+    """
+
+    device: str
+    entries: dict = dataclasses.field(default_factory=dict)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def lookup(self, kernel: str, backend: str, bucket: str):
+        """The tuned block for a key, or None (tuple-ized for dispatch)."""
+        e = self.entries.get(f"{kernel}/{backend}/{bucket}")
+        if e is None:
+            return None
+        block = e["block"]
+        return tuple(block) if isinstance(block, list) else block
+
+    def put(self, kernel: str, backend: str, bucket: str, block,
+            median_us: float, measured: Optional[Mapping] = None) -> None:
+        self.entries[entry_key(kernel, backend, bucket)] = {
+            "block": list(block) if isinstance(block, (tuple, list)) else block,
+            "median_us": float(median_us),
+            "candidates": {_block_label(b): float(us)
+                           for b, us in (measured or {}).items()},
+        }
+
+    def to_dict(self) -> dict:
+        return {"schema": SCHEMA, "device": self.device,
+                "meta": self.meta, "entries": self.entries}
+
+    @classmethod
+    def from_dict(cls, data: Mapping, source: str = "<dict>") -> "TuningTable":
+        if not isinstance(data, Mapping):
+            raise TuneError(f"{source}: tuning artifact is not a JSON object")
+        schema = data.get("schema")
+        if schema != SCHEMA:
+            raise TuneError(f"{source}: schema {schema!r} does not match "
+                            f"{SCHEMA!r}; regenerate with "
+                            f"python -m benchmarks.autotune")
+        device = data.get("device")
+        if not isinstance(device, str) or not device:
+            raise TuneError(f"{source}: malformed artifact: missing 'device'")
+        entries = data.get("entries")
+        if not isinstance(entries, Mapping):
+            raise TuneError(f"{source}: malformed artifact: missing 'entries'")
+        for key, e in entries.items():
+            parts = key.split("/")
+            if len(parts) != 3:
+                raise TuneError(f"{source}: malformed entry key {key!r} "
+                                f"(expected kernel/backend/bucket)")
+            entry_key(*parts)
+            if not isinstance(e, Mapping) or "block" not in e \
+                    or "median_us" not in e:
+                raise TuneError(f"{source}: malformed entry {key!r}: expected "
+                                f"{{block, median_us, candidates}}")
+            block = e["block"]
+            if isinstance(block, list):
+                if not block or not all(isinstance(d, int) and d > 0
+                                        for d in block):
+                    raise TuneError(f"{source}: entry {key!r}: bad block "
+                                    f"{block!r}")
+            elif not (isinstance(block, int) and block > 0):
+                raise TuneError(f"{source}: entry {key!r}: bad block "
+                                f"{block!r}")
+        meta = data.get("meta")
+        return cls(device=device, entries=dict(entries),
+                   meta=dict(meta) if isinstance(meta, Mapping) else {})
+
+    def save(self, path: str) -> None:
+        """Atomic write (temp file + ``os.replace``): an interrupted
+        sweep can never leave a half-written artifact behind."""
+        path = os.fspath(path)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+
+def _block_label(block) -> str:
+    if isinstance(block, (tuple, list)):
+        return "x".join(str(d) for d in block)
+    return str(block)
+
+
+def load(path: str) -> TuningTable:
+    """Load + validate a tuning artifact (one-line :class:`TuneError`)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        raise TuneError(f"cannot read tuning artifact {path!r}: "
+                        f"{e.strerror or e}") from e
+    except json.JSONDecodeError as e:
+        raise TuneError(f"unreadable tuning artifact {path!r}: {e}") from e
+    return TuningTable.from_dict(data, source=path)
+
+
+# -- process-wide activation (what dispatch consults) ------------------------
+
+_active: Optional[TuningTable] = None
+_source: Optional[str] = None
+_env_checked = False
+
+
+def activate(spec=None) -> Optional[TuningTable]:
+    """Install a tuning table process-wide.
+
+    ``spec`` is a :class:`TuningTable`, a path to an artifact, or None
+    (= activate :data:`ENV_VAR` if set, otherwise keep the current
+    state).  Returns the active table (or None).  Activation is global
+    because dispatch's lookups are module-level — exactly like the
+    static tables they replace.
+    """
+    global _active, _source, _env_checked
+    _env_checked = True
+    if spec is None:
+        path = os.environ.get(ENV_VAR)
+        if not path:
+            return _active
+        spec = path
+    if isinstance(spec, TuningTable):
+        _active, _source = spec, "<in-memory>"
+    else:
+        path = os.fspath(spec)
+        _active, _source = load(path), path
+    return _active
+
+
+def deactivate() -> None:
+    """Drop the active table: dispatch falls back to the static tables."""
+    global _active, _source, _env_checked
+    _active, _source, _env_checked = None, None, False
+
+
+def active_table() -> Optional[TuningTable]:
+    return _active
+
+
+def active_source() -> Optional[str]:
+    """Where the active table came from (path or ``<in-memory>``)."""
+    return _source
+
+
+@functools.lru_cache(maxsize=1)
+def _host_device() -> str:
+    return device_kind()
+
+
+def lookup(kernel: str, backend: str, bucket: str):
+    """The tuned block for a key, or None to fall back to the static
+    tables.  Pure cache read — never measures, never compiles — so it is
+    safe on (and designed for) the jitted hot path's trace time.  A
+    table tuned for a different device kind never applies."""
+    global _env_checked
+    if _active is None:
+        if _env_checked or not os.environ.get(ENV_VAR):
+            return None
+        activate(os.environ[ENV_VAR])
+    table = _active
+    if table is None or table.device != _host_device():
+        return None
+    return table.lookup(kernel, backend, bucket)
+
+
+# -- the sweep core ----------------------------------------------------------
+
+def sweep(measure_fn: Callable, *, kernels: Sequence[str] = KERNELS,
+          backends: Sequence[str] = ("interpret", "xla"),
+          buckets: Sequence[str] = BUCKETS,
+          sizes: Optional[Mapping[str, int]] = None,
+          device: Optional[str] = None, meta: Optional[dict] = None,
+          verbose: bool = False) -> TuningTable:
+    """Measure every candidate and cache the winners as a TuningTable.
+
+    ``measure_fn(kernel, backend, bucket, block, size) -> median_us``
+    owns problem construction and timing (``benchmarks.autotune`` backs
+    it with ``benchmarks.harness.measure``; tests inject a fake).
+    ``sizes`` maps bucket -> representative max extent (used both to
+    size the measured problem and to clip oversized candidates).
+    Untunable (kernel, backend) pairs are skipped, so one call sweeps
+    whatever the host can actually run.
+    """
+    sizes = dict(sizes or {})
+    table = TuningTable(device=device or device_kind(), meta=dict(meta or {}))
+    for kernel in kernels:
+        for backend in backends:
+            if not tunable(kernel, backend):
+                continue
+            for bucket in buckets:
+                size = sizes.get(bucket)
+                grid = candidates(kernel, backend, bucket, max_extent=size)
+                measured = {}
+                for block in grid:
+                    measured[tuple(block) if isinstance(block, list)
+                             else block] = float(
+                        measure_fn(kernel, backend, bucket, block, size))
+                winner = min(measured, key=measured.get)
+                table.put(kernel, backend, bucket, winner, measured[winner],
+                          measured)
+                if verbose:
+                    print(f"[autotune] {entry_key(kernel, backend, bucket)}"
+                          f": {_block_label(winner)} "
+                          f"({measured[winner]:.1f} us over "
+                          f"{len(measured)} candidates)")
+    return table

@@ -9,15 +9,22 @@ each taking a ``backend`` knob:
                  runs on CPU/GPU, used by tests to validate the kernels
   ``xla``        the pure-jnp reference implementation (``ref.py``)
 
-Block/tile sizes are no longer hardcoded in the kernels: they come from
-per-kernel tuning tables keyed on ``(backend, shape bucket)``, so the
-interpreter path uses small tiles (fast to simulate) while the TPU path
-uses MXU/VMEM-sized tiles.  Callers can still override explicitly.
+Block/tile sizes are no longer hardcoded in the kernels: every lookup
+consults the measured-and-cached autotuner table first
+(:mod:`repro.kernels.autotune`, keyed on ``(kernel, backend, shape
+bucket, device_kind)`` and activated explicitly — never tuned implicitly
+on a hot path) and falls back to the static per-bucket tables below, so
+the interpreter path uses small tiles (fast to simulate) while the TPU
+path uses MXU/VMEM-sized tiles.  Callers can still override explicitly.
+With no tuned artifact activated, behavior is bit-identical to the
+static tables.
 
 ``repro.core.numerics.NumericsConfig.backend`` feeds straight into this
 module; the jit'd public wrappers live in ``ops.py``.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +32,7 @@ import jax.numpy as jnp
 from repro.core.afpm import AFPMConfig
 from repro.core.numerics import BACKENDS
 
-from . import ref
+from . import autotune, ref
 from .afpm_bitwise import afpm_bitwise_pallas
 from .afpm_matmul import afpm_matmul_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -92,7 +99,9 @@ BITWISE_BLOCKS = {
     ("interpret", "large"): (128, 256),
 }
 
-# SSD scan chunk length (the sequential grid step).
+# SSD scan chunk length (the sequential grid step).  The xla reference
+# is chunked too — its chunk follows the same tuning policy instead of
+# the formerly hardcoded 128.
 SCAN_CHUNKS = {
     ("pallas", "small"): 128,
     ("pallas", "medium"): 128,
@@ -100,19 +109,34 @@ SCAN_CHUNKS = {
     ("interpret", "small"): 32,
     ("interpret", "medium"): 64,
     ("interpret", "large"): 128,
+    ("xla", "small"): 128,
+    ("xla", "medium"): 128,
+    ("xla", "large"): 256,
 }
 
 
 def matmul_block_sizes(backend: str, M: int, K: int, N: int):
-    return MATMUL_BLOCKS[(backend, shape_bucket(M, K, N))]
+    bucket = shape_bucket(M, K, N)
+    tuned = autotune.lookup("matmul", backend, bucket)
+    return tuned if tuned is not None else MATMUL_BLOCKS[(backend, bucket)]
 
 
 def bitwise_block(backend: str, nelems: int):
-    return BITWISE_BLOCKS[(backend, shape_bucket(int(nelems ** 0.5) + 1))]
+    # bucket by the side of the square an nelems-flat operand tiles into,
+    # ceiling-rounded: 65536 elems -> extent 256 -> "small" (the old
+    # int(nelems ** 0.5) + 1 pushed exact-boundary sizes a bucket up)
+    side = math.isqrt(max(nelems, 1))
+    if side * side < nelems:
+        side += 1
+    bucket = shape_bucket(side)
+    tuned = autotune.lookup("bitwise", backend, bucket)
+    return tuned if tuned is not None else BITWISE_BLOCKS[(backend, bucket)]
 
 
 def scan_chunk(backend: str, L: int) -> int:
-    return SCAN_CHUNKS[(backend, shape_bucket(L))]
+    bucket = shape_bucket(L)
+    tuned = autotune.lookup("ssd", backend, bucket)
+    return tuned if tuned is not None else SCAN_CHUNKS[(backend, bucket)]
 
 
 # -- audited kernel entry points --------------------------------------------
@@ -167,7 +191,9 @@ def ssd(x, dt, A, B, C, *, chunk: int | None = None,
         backend: str = "auto") -> jax.Array:
     """Mamba2 SSD chunked scan ``(L,H,P),(L,H),(H,),(L,N),(L,N) -> (L,H,P)``.
 
-    ``chunk=None`` takes the tuned chunk for the resolved backend; any
+    ``chunk=None`` takes the tuned chunk for the resolved backend — every
+    backend, the xla reference included, goes through the same
+    ``scan_chunk`` lookup (tuned table first, static fallback); any
     sequence length is accepted — non-multiples of the chunk are padded
     with dt=0 steps (exact: zero decay increment and zero input weight)
     and sliced back.
@@ -175,7 +201,7 @@ def ssd(x, dt, A, B, C, *, chunk: int | None = None,
     backend = resolve_backend(backend)
     L = x.shape[0]
     if chunk is None:
-        chunk = scan_chunk(backend, L) if backend != "xla" else 128
+        chunk = scan_chunk(backend, L)
     Q = min(chunk, L)
     pad = (-L) % Q
     if pad:

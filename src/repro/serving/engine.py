@@ -33,6 +33,7 @@ no compilation (``tests/serving_sim.py``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Mapping, Optional, Sequence
 
@@ -76,11 +77,19 @@ class TransformerRunner(ModelRunner):
     ``(n_slots, max_len)`` and stays resident across the engine's
     lifetime; prefill is jitted per observed prompt length (prompts are
     not padded — padding would change the prefill numerics vs a solo
-    run).  Greedy argmax happens outside the jit, mirroring
-    ``Session.generate`` so the token stream is bit-comparable.
+    run).  The per-length prefill cache is LRU-bounded
+    (``prefill_cache_size``, default 32 lengths): under ragged
+    production traffic every distinct prompt length would otherwise pin
+    a compiled executable forever.  Greedy argmax happens outside the
+    jit, mirroring ``Session.generate`` so the token stream is
+    bit-comparable.
     """
 
-    def __init__(self, cfg, params, n_slots: int, max_len: int):
+    #: Default LRU bound on per-prompt-length jitted prefills.
+    PREFILL_CACHE_SIZE = 32
+
+    def __init__(self, cfg, params, n_slots: int, max_len: int, *,
+                 prefill_cache_size: Optional[int] = None):
         import jax
 
         from repro.models import transformer
@@ -89,6 +98,11 @@ class TransformerRunner(ModelRunner):
             raise ServingError(
                 f"{cfg.arch_id}: encoder-decoder archs are not servable by "
                 f"the token-only engine (requests carry no encoder inputs)")
+        if prefill_cache_size is None:
+            prefill_cache_size = self.PREFILL_CACHE_SIZE
+        if prefill_cache_size < 1:
+            raise ServingError(
+                f"prefill_cache_size must be >= 1, got {prefill_cache_size}")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -97,7 +111,9 @@ class TransformerRunner(ModelRunner):
         self._decode = jax.jit(
             lambda p, tok, st, pos: transformer.decode_step(
                 p, cfg, {"token": tok}, st, pos))
-        self._prefill = {}  # prompt_len -> jitted prefill
+        # prompt_len -> jitted prefill, LRU order (least recent first)
+        self._prefill = collections.OrderedDict()
+        self._prefill_cache_size = prefill_cache_size
 
     def prefill(self, prompt: np.ndarray):
         import jax
@@ -106,11 +122,17 @@ class TransformerRunner(ModelRunner):
         from repro.models import transformer
 
         L = int(np.asarray(prompt).shape[-1])
-        if L not in self._prefill:
-            self._prefill[L] = jax.jit(
+        fn = self._prefill.get(L)
+        if fn is None:
+            fn = jax.jit(
                 lambda p, b: transformer.prefill(p, self.cfg, b,
                                                  max_len=self.max_len))
-        logits, state = self._prefill[L](
+            self._prefill[L] = fn
+            while len(self._prefill) > self._prefill_cache_size:
+                self._prefill.popitem(last=False)
+        else:
+            self._prefill.move_to_end(L)
+        logits, state = fn(
             self.params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]})
         token = int(jnp.argmax(logits[:, -1:], axis=-1)[0, 0])
         return token, state
@@ -186,22 +208,27 @@ class Engine:
         }
         self._step = 0
         self._n_submitted = 0
+        self._inflight: dict = {}  # request_id -> Request (queued or active)
 
     # -- construction -------------------------------------------------------
 
     @classmethod
     def from_session(cls, session, tiers: Sequence[TierSpec] = DEFAULT_TIERS,
                      *, slots: int = 4, max_len: int = 64, clock=None,
-                     aging: Optional[float] = None) -> "Engine":
+                     aging: Optional[float] = None,
+                     prefill_cache: Optional[int] = None) -> "Engine":
         """Build real lanes over a :class:`repro.session.Session`: one
         :class:`TransformerRunner` per tier, every tier's config sharing
         the session's resident params (tier policies go through the same
-        coercion as ``Session(policy=...)``)."""
+        coercion as ``Session(policy=...)``).  ``prefill_cache`` bounds
+        each lane's per-prompt-length jit cache (default
+        :data:`TransformerRunner.PREFILL_CACHE_SIZE`)."""
         runners = {}
         for spec in tiers:
             tier_sess = session.replace(policy=spec.policy)
             runners[spec.name] = TransformerRunner(
-                tier_sess.config, session.params, slots, max_len)
+                tier_sess.config, session.params, slots, max_len,
+                prefill_cache_size=prefill_cache)
         return cls(runners, tiers, clock=clock, aging=aging)
 
     # -- submission ---------------------------------------------------------
@@ -224,8 +251,14 @@ class Engine:
         if lane is None:
             raise ServingError(f"unknown tier {tier!r}; engine serves "
                                f"{sorted(self._lanes)}")
+        rid = request_id or f"r{self._n_submitted}"
+        if rid in self._inflight:
+            raise ServingError(
+                f"request id {rid!r} is already in flight (tier "
+                f"{self._inflight[rid].tier!r}); ids must be unique until "
+                f"the request finishes")
         req = Request(
-            id=request_id or f"r{self._n_submitted}",
+            id=rid,
             prompt=prompt,
             max_new_tokens=max_new_tokens,
             tier=tier,
@@ -240,6 +273,7 @@ class Engine:
                 f"request {req.id!r} needs {need} cache positions "
                 f"(prompt {req.prompt.shape[0]} + {req.max_new_tokens} new) "
                 f"but tier {tier!r} pools max_len={lane.runner.max_len}")
+        self._inflight[rid] = req
         return self.scheduler.submit(req, self.clock.now())
 
     # -- the serving loop ---------------------------------------------------
@@ -260,6 +294,7 @@ class Engine:
             req.finish_step = self._step
             lane.alloc.free(req.slot)
             del lane.active[req.slot]
+            self._inflight.pop(req.id, None)
             lane.stats.n_finished += 1
             self._emit(events, req, "finish")
 

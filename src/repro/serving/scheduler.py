@@ -85,7 +85,7 @@ DEFAULT_TIERS: tuple = (
 # requests
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     """One generation request plus its mutable serving progress.
 
@@ -94,6 +94,13 @@ class Request:
     ``tokens`` accumulates the greedy continuation — for a request served
     solo it is bit-identical to ``Session.generate`` of the same prompt
     under the tier's policy (asserted in ``tests/test_serving_numerics``).
+
+    ``eq=False``: requests compare by identity.  The auto-generated
+    ``__eq__`` would compare the ``np.ndarray`` prompt field, so two
+    queued requests sharing an id made ``Scheduler.pop_next``'s
+    ``q.remove(best)`` raise "truth value of an array is ambiguous"
+    (duplicate in-flight ids are additionally rejected at
+    ``Engine.submit``).
     """
 
     id: str

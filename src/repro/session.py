@@ -130,7 +130,7 @@ class Session:
 
     def __init__(self, arch, policy=None, backend: Optional[str] = None,
                  mesh: Optional[str] = None, *, seed: int = 0,
-                 reduced: bool = True, params=None, state=None):
+                 reduced: bool = True, params=None, state=None, tune=None):
         from repro.models import resnet as resnet_mod
 
         if isinstance(arch, str):
@@ -162,6 +162,17 @@ class Session:
         self._params = params
         self._state = state  # resnet batchnorm state
         self._jit_cache = {}  # (config, max_len) -> (prefill, decode)
+        # measured kernel-tuning artifact (path or TuningTable); activation
+        # is process-wide — the dispatch lookups it feeds are module-level,
+        # exactly like the static tables they replace
+        self._tune = tune
+        if tune is not None:
+            from repro.kernels import autotune
+
+            try:
+                autotune.activate(tune)
+            except autotune.TuneError as e:
+                raise SessionError(str(e)) from e
 
     # -- configuration ------------------------------------------------------
 
@@ -186,10 +197,10 @@ class Session:
 
     def replace(self, **kw) -> "Session":
         """A new Session with fields replaced (policy/backend/mesh/seed/
-        params/state); params/state are shared unless overridden."""
+        params/state/tune); params/state are shared unless overridden."""
         args = dict(policy=self._numerics_override, backend=self.backend,
                     mesh=self.mesh, seed=self.seed, params=self._params,
-                    state=self._state)
+                    state=self._state, tune=self._tune)
         unknown = set(kw) - set(args)
         if unknown:
             raise SessionError(
@@ -198,7 +209,8 @@ class Session:
         args.update(kw)
         return Session(self._base_cfg, args["policy"], args["backend"],
                        args["mesh"], seed=args["seed"],
-                       params=args["params"], state=args["state"])
+                       params=args["params"], state=args["state"],
+                       tune=args["tune"])
 
     # -- parameters ---------------------------------------------------------
 
@@ -335,7 +347,8 @@ class Session:
     # -- serving (continuous batching) -------------------------------------
 
     def serving_engine(self, tiers=None, *, slots: int = 4,
-                       max_len: int = 64, clock=None, aging=None):
+                       max_len: int = 64, clock=None, aging=None,
+                       prefill_cache=None):
         """A continuous-batching :class:`repro.serving.Engine` over this
         session's resident weights: one KV-slot pool + one resident
         compiled decode per accuracy tier, requests joining mid-decode
@@ -344,9 +357,11 @@ class Session:
         ``tiers`` is a sequence of :class:`repro.serving.TierSpec`
         (default: the premium/standard/bulk SLA ladder); each tier's
         ``policy`` goes through the same coercion as ``Session(policy=...)``.
-        Continuous batching never changes a request's numerics — every
-        request's tokens are bit-identical to a solo :meth:`generate` of
-        the same prompt under that tier's policy.
+        ``prefill_cache`` bounds each lane's per-prompt-length jitted
+        prefill cache (LRU; default 32 lengths).  Continuous batching
+        never changes a request's numerics — every request's tokens are
+        bit-identical to a solo :meth:`generate` of the same prompt under
+        that tier's policy.
         """
         if self._family != "lm":
             raise SessionError("serving_engine() is the LM entry point; "
@@ -355,7 +370,8 @@ class Session:
 
         tiers = DEFAULT_TIERS if tiers is None else tuple(tiers)
         return Engine.from_session(self, tiers, slots=slots, max_len=max_len,
-                                   clock=clock, aging=aging)
+                                   clock=clock, aging=aging,
+                                   prefill_cache=prefill_cache)
 
     # -- auto-configuration (the sweep) ------------------------------------
 
@@ -500,6 +516,12 @@ def _add_common(ap):
                          "(exact/segmented1/segmented2/segmented3)")
     ap.add_argument("--backend", default=None,
                     choices=["auto", "pallas", "interpret", "xla"])
+    ap.add_argument("--tune", default=None, metavar="TUNE_JSON",
+                    help="measured kernel-tuning artifact to activate "
+                         "(kernels/TUNE_<device>.json; generate with "
+                         "python -m benchmarks.autotune). Default: the "
+                         "REPRO_TUNE_FILE env var if set, else the "
+                         "static tuning tables")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full arch config (default: reduced)")
@@ -610,7 +632,7 @@ def main(argv=None) -> int:
     reduced = args.reduced if args.cmd == "dryrun" else not args.full_size
     try:
         sess = Session(args.arch, policy=args.policy, backend=args.backend,
-                       seed=args.seed, reduced=reduced)
+                       seed=args.seed, reduced=reduced, tune=args.tune)
         if args.cmd == "generate":
             if sess.is_policy:
                 print_ppa_report(sess.ppa_report())

@@ -93,6 +93,45 @@ def test_report_round_trips_through_json(tmp_path):
     assert data["metrics"]["m_time"]["meta"]["iters"] == 2
 
 
+def test_report_write_is_atomic(tmp_path, monkeypatch):
+    """An interrupted write must never leave a truncated BENCH_*.json
+    (check_bench would exit 2 on the next CI run): the artifact lands
+    via temp file + os.replace, and a crash mid-serialization leaves the
+    previous artifact intact."""
+    path = tmp_path / "BENCH_test.json"
+    rep = harness.BenchReport(fast=True)
+    rep.add("m", 1.0, "ratio")
+    rep.write(path)
+
+    class Boom(RuntimeError):
+        pass
+
+    bad = harness.BenchReport(fast=True)
+    bad.add("m", 2.0, "ratio")
+    monkeypatch.setattr(bad, "to_dict",
+                        lambda: (_ for _ in ()).throw(Boom("mid-write")))
+    with pytest.raises(Boom):
+        bad.write(path)
+    # prior artifact untouched, no temp debris
+    assert json.loads(path.read_text())["metrics"]["m"]["value"] == 1.0
+    assert [p.name for p in tmp_path.iterdir()] == ["BENCH_test.json"]
+
+
+def test_report_meta_records_active_tuning(tmp_path):
+    from repro.kernels import autotune
+
+    assert harness.BenchReport().meta["tune"] is None
+    table = autotune.TuningTable(device=autotune.device_kind())
+    table.put("ssd", "xla", "small", 64, 1.0)
+    path = tmp_path / "TUNE_t.json"
+    table.save(str(path))
+    try:
+        harness.activate_tuning(str(path))
+        assert harness.BenchReport().meta["tune"] == str(path)
+    finally:
+        autotune.deactivate()
+
+
 def test_report_rejects_duplicate_metric():
     rep = harness.BenchReport()
     rep.add("m", 1.0, "ratio")
@@ -221,6 +260,79 @@ def test_check_bench_cli_exit_codes(tmp_path):
     assert proc.returncode == 2 and "ERROR" in proc.stderr
 
 
+# ------------------------------------------------- the tuning-artifact gate
+
+def _mini_tune(device="cpu", **entries):
+    from repro.kernels import autotune
+
+    t = autotune.TuningTable(device=device)
+    for key, block in (entries or {"ssd__xla__small": 64,
+                                   "ssd__xla__medium": 128}).items():
+        kernel, backend, bucket = key.split("__")
+        t.put(kernel, backend, bucket, block, 1.0)
+    return t
+
+
+def test_check_bench_tune_passes_on_self_and_notes_block_changes():
+    cb = _load_check_bench()
+    violations, _ = cb.compare_tune(_mini_tune(), _mini_tune())
+    assert violations == []
+    # a different measured winner is informational, not a failure
+    fresh = _mini_tune(ssd__xla__small=32, ssd__xla__medium=128)
+    violations, infos = cb.compare_tune(_mini_tune(), fresh)
+    assert violations == []
+    assert any("ssd/xla/small" in line and "->" in line for line in infos)
+
+
+def test_check_bench_tune_gates_coverage_not_choices():
+    cb = _load_check_bench()
+    fresh = _mini_tune(ssd__xla__small=64)  # medium entry dropped
+    violations, _ = cb.compare_tune(_mini_tune(), fresh)
+    assert len(violations) == 1 and "ssd/xla/medium" in violations[0]
+    # device mismatch is a note (blocks aren't comparable), not a failure
+    violations, infos = cb.compare_tune(_mini_tune(),
+                                        _mini_tune(device="tpu_v4"))
+    assert violations == []
+    assert any("device kind differs" in line for line in infos)
+
+
+def test_check_bench_tune_cli_exit_codes(tmp_path):
+    ok = tmp_path / "TUNE_ok.json"
+    _mini_tune().save(str(ok))
+    sparse = tmp_path / "TUNE_sparse.json"
+    _mini_tune(ssd__xla__small=64).save(str(sparse))
+    corrupt = tmp_path / "TUNE_bad.json"
+    corrupt.write_text('{"schema": "repro-tune/1"')  # truncated
+
+    def run(fresh, baseline):
+        return subprocess.run(
+            [sys.executable, str(REPO / "tools" / "check_bench.py"),
+             "--tune-fresh", str(fresh), "--tune-baseline", str(baseline)],
+            capture_output=True, text=True)
+
+    assert run(ok, ok).returncode == 0
+    proc = run(sparse, ok)
+    assert proc.returncode == 1 and "missing from fresh sweep" in proc.stderr
+    assert run(corrupt, ok).returncode == 2
+    assert run(ok, tmp_path / "absent.json").returncode == 2
+    # no positional and no --tune-fresh: structured usage error
+    bare = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_bench.py")],
+        capture_output=True, text=True)
+    assert bare.returncode == 2 and "nothing to check" in bare.stderr
+
+
+def test_committed_tuning_artifact_is_valid_and_covers_ci_keys():
+    cb = _load_check_bench()
+    table = cb.load_tune(REPO / "kernels" / "TUNE_cpu_ci.json")
+    assert table.device == "cpu"          # CI runners are cpu device_kind
+    assert table.meta.get("fast") is True  # CI sweeps fast-vs-fast
+    # the keys the CI bench run actually exercises must be tuned
+    for key in ("ssd/xla/medium", "matmul/interpret/small",
+                "bitwise/interpret/small"):
+        assert key in table.entries, key
+
+
 # -------------------------------------------------- committed baseline + CI
 
 def test_committed_baseline_is_schema_valid():
@@ -234,9 +346,18 @@ def test_committed_baseline_is_schema_valid():
     gated = [n for n, m in data["metrics"].items()
              if cb.tolerance_for(n, m["unit"]) is not None]
     assert len(gated) >= 10
+    # the autotuner's headline gate metric rides the same trajectory
+    assert "autotuned_vs_static" in data["metrics"]
+    assert cb.tolerance_for("autotuned_vs_static", "ratio") is not None
 
 
 def test_ci_bench_job_runs_the_gate():
     ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
     assert "python -m benchmarks.run --fast --skip-resnet" in ci
     assert "tools/check_bench.py --baseline benchmarks/BENCH_cpu_ci.json" in ci
+    # the bench run measures under the committed tuning artifact, and the
+    # artifact itself is regenerated + gated in the same job
+    assert "--tune kernels/TUNE_cpu_ci.json" in ci
+    assert "python -m benchmarks.autotune --fast" in ci
+    assert ("tools/check_bench.py --tune-baseline kernels/TUNE_cpu_ci.json"
+            in ci)

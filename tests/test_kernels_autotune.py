@@ -1,0 +1,243 @@
+"""The measure-and-cache kernel autotuner (repro.kernels.autotune).
+
+Guarantees pinned here:
+
+1. artifact contract — the ``repro-tune/1`` schema round-trips, saves
+   atomically, and every malformed shape (bad schema tag, bad keys, bad
+   blocks, truncated JSON) is a one-line :class:`TuneError`, never a
+   KeyError deep in dispatch;
+2. sweep core — the injected ``measure_fn`` drives winner selection
+   (argmin of median µs), candidate grids are validated and clipped to
+   the measured problem, and untunable (kernel, backend) pairs are
+   skipped rather than crashed on;
+3. activation/dispatch wiring — with a table active, the dispatch
+   lookups resolve from it; with none (or one tuned for a different
+   device kind), behavior is bit-identical to the static tables.
+   Activation is explicit only: a Session knob, the REPRO_TUNE_FILE env
+   var, or activate() — never implicit measurement on a hot path.
+"""
+import json
+import os
+
+import pytest
+
+from repro.kernels import autotune, dispatch
+from repro.kernels.autotune import TuneError, TuningTable
+
+
+@pytest.fixture(autouse=True)
+def _clean_activation(monkeypatch):
+    """Every test starts and ends with no active table and no env var."""
+    monkeypatch.delenv(autotune.ENV_VAR, raising=False)
+    autotune.deactivate()
+    yield
+    autotune.deactivate()
+
+
+def make_table(device=None, **entries):
+    t = TuningTable(device=device or autotune.device_kind())
+    for key, block in entries.items():
+        kernel, backend, bucket = key.split("__")
+        t.put(kernel, backend, bucket, block, 1.0)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# artifact contract
+# ---------------------------------------------------------------------------
+
+def test_schema_round_trip(tmp_path):
+    t = make_table(matmul__interpret__small=(16, 16, 16),
+                   bitwise__interpret__medium=(64, 128),
+                   ssd__xla__large=256)
+    t.meta["fast"] = True
+    path = tmp_path / "TUNE_test.json"
+    t.save(str(path))
+    loaded = autotune.load(str(path))
+    assert loaded.device == t.device
+    assert loaded.meta == {"fast": True}
+    assert loaded.lookup("matmul", "interpret", "small") == (16, 16, 16)
+    assert loaded.lookup("bitwise", "interpret", "medium") == (64, 128)
+    assert loaded.lookup("ssd", "xla", "large") == 256
+    assert loaded.lookup("ssd", "xla", "small") is None
+    data = json.loads(path.read_text())
+    assert data["schema"] == autotune.SCHEMA
+
+
+def test_save_is_atomic_and_leaves_no_temp(tmp_path):
+    path = tmp_path / "TUNE_a.json"
+    make_table(ssd__xla__small=64).save(str(path))
+    # overwrite with different content: reader must never see a mix
+    make_table(ssd__xla__small=128).save(str(path))
+    assert autotune.load(str(path)).lookup("ssd", "xla", "small") == 128
+    assert [p.name for p in tmp_path.iterdir()] == ["TUNE_a.json"]
+
+
+def test_load_rejects_malformed_artifacts(tmp_path):
+    cases = {
+        "missing.json": None,  # no file at all
+        "not_json.json": "{oops",
+        "bad_schema.json": json.dumps({"schema": "repro-tune/999",
+                                       "device": "cpu", "entries": {}}),
+        "no_device.json": json.dumps({"schema": autotune.SCHEMA,
+                                      "entries": {}}),
+        "bad_key.json": json.dumps({
+            "schema": autotune.SCHEMA, "device": "cpu",
+            "entries": {"matmul/small": {"block": 1, "median_us": 1.0}}}),
+        "bad_kernel.json": json.dumps({
+            "schema": autotune.SCHEMA, "device": "cpu",
+            "entries": {"conv/xla/small": {"block": 1, "median_us": 1.0}}}),
+        "bad_block.json": json.dumps({
+            "schema": autotune.SCHEMA, "device": "cpu",
+            "entries": {"ssd/xla/small": {"block": -8, "median_us": 1.0}}}),
+        "no_median.json": json.dumps({
+            "schema": autotune.SCHEMA, "device": "cpu",
+            "entries": {"ssd/xla/small": {"block": 64}}}),
+    }
+    for name, content in cases.items():
+        p = tmp_path / name
+        if content is not None:
+            p.write_text(content)
+        with pytest.raises(TuneError):
+            autotune.load(str(p))
+
+
+def test_entry_key_validates_names():
+    assert autotune.entry_key("ssd", "xla", "large") == "ssd/xla/large"
+    with pytest.raises(TuneError):
+        autotune.entry_key("conv", "xla", "large")
+    with pytest.raises(TuneError):
+        autotune.entry_key("ssd", "cuda", "large")
+    with pytest.raises(TuneError):
+        autotune.entry_key("ssd", "xla", "huge")
+
+
+def test_candidates_clip_to_problem_but_never_empty():
+    full = autotune.candidates("matmul", "interpret", "large")
+    assert all(isinstance(b, tuple) and len(b) == 3 for b in full)
+    clipped = autotune.candidates("matmul", "interpret", "large",
+                                  max_extent=64)
+    assert clipped == [(64, 64, 64)]
+    # every candidate oversized -> keep the smallest instead of an empty grid
+    tiny = autotune.candidates("matmul", "interpret", "large", max_extent=8)
+    assert tiny == [full[0]]
+    # the xla matmul reference takes no blocks: not tunable
+    assert not autotune.tunable("matmul", "xla")
+    assert autotune.tunable("ssd", "xla")
+    with pytest.raises(TuneError):
+        autotune.candidates("matmul", "xla", "small")
+
+
+# ---------------------------------------------------------------------------
+# sweep core (fake measure_fn — no kernels, no timing)
+# ---------------------------------------------------------------------------
+
+def test_sweep_picks_the_measured_argmin():
+    # fastest candidate by construction: the one whose first dim is 64
+    def fake_measure(kernel, backend, bucket, block, size):
+        dims = block if isinstance(block, tuple) else (block,)
+        return 1.0 if dims[0] == 64 else 100.0
+
+    table = autotune.sweep(fake_measure, kernels=("ssd",),
+                           backends=("interpret", "xla"),
+                           buckets=("small", "medium"), device="testdev")
+    assert table.device == "testdev"
+    assert table.lookup("ssd", "interpret", "small") == 64
+    assert table.lookup("ssd", "xla", "medium") == 64
+    # every candidate's measurement is recorded alongside the winner
+    entry = table.entries["ssd/xla/medium"]
+    assert entry["median_us"] == 1.0
+    assert set(entry["candidates"]) == {"64", "128", "256"}
+
+
+def test_sweep_skips_untunable_pairs_and_clips_by_size():
+    seen = []
+
+    def fake_measure(kernel, backend, bucket, block, size):
+        seen.append((kernel, backend, bucket, block))
+        return 1.0
+
+    table = autotune.sweep(fake_measure, kernels=("matmul", "ssd"),
+                           backends=("xla",), buckets=("small",),
+                           sizes={"small": 32}, device="testdev")
+    # matmul/xla has no block knob: skipped entirely, no entry, no calls
+    assert all(k != "matmul" for k, *_ in seen)
+    assert "matmul/xla/small" not in table.entries
+    # ssd candidates above the 32-extent problem were clipped
+    assert all(b <= 32 for *_, b in seen)
+    assert table.lookup("ssd", "xla", "small") == 32
+
+
+# ---------------------------------------------------------------------------
+# activation + dispatch wiring
+# ---------------------------------------------------------------------------
+
+def test_dispatch_resolves_from_active_table():
+    t = make_table(matmul__interpret__small=(16, 16, 16),
+                   bitwise__interpret__small=(48, 48),
+                   ssd__xla__small=48)
+    autotune.activate(t)
+    assert autotune.active_source() == "<in-memory>"
+    assert dispatch.matmul_block_sizes("interpret", 64, 64, 64) == (16, 16, 16)
+    assert dispatch.bitwise_block("interpret", 1024) == (48, 48)
+    assert dispatch.scan_chunk("xla", 96) == 48
+    # keys the table does not cover fall back to the static tables
+    assert dispatch.matmul_block_sizes("interpret", 512, 512, 512) \
+        == dispatch.MATMUL_BLOCKS[("interpret", "medium")]
+
+
+def test_deactivate_restores_static_tables_bit_identically():
+    static = (dispatch.matmul_block_sizes("interpret", 64, 64, 64),
+              dispatch.bitwise_block("interpret", 1024),
+              dispatch.scan_chunk("xla", 96))
+    autotune.activate(make_table(matmul__interpret__small=(16, 16, 16),
+                                 bitwise__interpret__small=(48, 48),
+                                 ssd__xla__small=48))
+    autotune.deactivate()
+    assert (dispatch.matmul_block_sizes("interpret", 64, 64, 64),
+            dispatch.bitwise_block("interpret", 1024),
+            dispatch.scan_chunk("xla", 96)) == static
+    assert static == (dispatch.MATMUL_BLOCKS[("interpret", "small")],
+                      dispatch.BITWISE_BLOCKS[("interpret", "small")],
+                      dispatch.SCAN_CHUNKS[("xla", "small")])
+
+
+def test_table_for_other_device_kind_never_applies():
+    t = make_table(device="tpu_v4", ssd__xla__small=999)
+    autotune.activate(t)
+    assert autotune.active_table() is t  # active, but gated off by device
+    assert dispatch.scan_chunk("xla", 96) \
+        == dispatch.SCAN_CHUNKS[("xla", "small")]
+
+
+def test_env_var_activates_lazily_on_first_lookup(tmp_path, monkeypatch):
+    path = tmp_path / "TUNE_env.json"
+    make_table(ssd__xla__small=48).save(str(path))
+    monkeypatch.setenv(autotune.ENV_VAR, str(path))
+    autotune.deactivate()  # forget the env var was already checked
+    assert dispatch.scan_chunk("xla", 96) == 48
+    assert autotune.active_source() == str(path)
+
+
+def test_activate_path_errors_are_structured(tmp_path):
+    with pytest.raises(TuneError, match="cannot read"):
+        autotune.activate(str(tmp_path / "nope.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text("{truncated")
+    with pytest.raises(TuneError, match="unreadable"):
+        autotune.activate(str(bad))
+    # a failed activation must not leave a half-installed table behind
+    assert autotune.active_table() is None
+
+
+def test_session_tune_knob_activates_and_rejects_bad_artifacts(tmp_path):
+    from repro.session import Session, SessionError
+
+    path = tmp_path / "TUNE_sess.json"
+    make_table(ssd__xla__small=48).save(str(path))
+    Session("qwen3-4b", tune=str(path))
+    assert autotune.active_source() == str(path)
+    assert dispatch.scan_chunk("xla", 96) == 48
+    autotune.deactivate()
+    with pytest.raises(SessionError):
+        Session("qwen3-4b", tune=str(tmp_path / "missing.json"))

@@ -89,6 +89,46 @@ def test_tuning_tables_cover_all_buckets():
                 < dispatch.MATMUL_BLOCKS[("pallas", bucket)])
 
 
+def test_bitwise_block_bucket_boundaries_exact():
+    """Regression: int(nelems ** 0.5) + 1 pushed exact-square boundary
+    sizes one bucket up (65536 elems -> side 257 -> "medium"); the
+    ceiling-isqrt bucketing keeps 256**2 in "small" and only crosses on
+    65537."""
+    assert dispatch.bitwise_block("interpret", 256 * 256) \
+        == dispatch.BITWISE_BLOCKS[("interpret", "small")]
+    assert dispatch.bitwise_block("interpret", 256 * 256 + 1) \
+        == dispatch.BITWISE_BLOCKS[("interpret", "medium")]
+    # the medium/large boundary follows the same rule (1024**2 elems)
+    assert dispatch.bitwise_block("interpret", 1024 * 1024) \
+        == dispatch.BITWISE_BLOCKS[("interpret", "medium")]
+    assert dispatch.bitwise_block("interpret", 1024 * 1024 + 1) \
+        == dispatch.BITWISE_BLOCKS[("interpret", "large")]
+    # degenerate sizes bucket small instead of crashing isqrt
+    assert dispatch.bitwise_block("interpret", 0) \
+        == dispatch.BITWISE_BLOCKS[("interpret", "small")]
+    assert dispatch.bitwise_block("interpret", 1) \
+        == dispatch.BITWISE_BLOCKS[("interpret", "small")]
+
+
+def test_ssd_xla_default_chunk_comes_from_table(rng):
+    """The xla reference's chunk=None is tuned like every other backend
+    (the legacy path hardcoded 128 regardless of L) and stays exact."""
+    assert dispatch.scan_chunk("xla", 96) \
+        == dispatch.SCAN_CHUNKS[("xla", "small")]
+    assert dispatch.scan_chunk("xla", 2048) \
+        == dispatch.SCAN_CHUNKS[("xla", "large")]
+    L, H, P, N = 72, 2, 8, 4
+    x = jnp.asarray(rng.standard_normal((L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (L, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((L, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((L, N)), jnp.float32)
+    got = dispatch.ssd(x, dt, A, B, C, backend="xla")
+    want = ref.ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_numerics_config_backend_validation():
     with pytest.raises(ValueError):
         NumericsConfig(mode="segmented", backend="cuda")

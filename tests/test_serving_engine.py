@@ -254,3 +254,76 @@ def test_run_raises_structured_error_on_bound():
     eng.submit(np.array([1]), max_new_tokens=5)
     with pytest.raises(ServingError, match="did not drain"):
         eng.run(max_steps=1)
+
+
+# ---------------------------------------------------------------------------
+# request identity: duplicate ids, ndarray-safe equality, cache bounds
+# ---------------------------------------------------------------------------
+
+def test_duplicate_inflight_id_rejected_then_reusable():
+    eng, clock, _ = make_stub_engine(slots=2)
+    eng.submit(np.array([1, 2]), max_new_tokens=2, request_id="job")
+    # same id while the first is still in flight: structured rejection
+    # at submit time, not a silent second request shadowing the first
+    with pytest.raises(ServingError, match="already in flight"):
+        eng.submit(np.array([3]), max_new_tokens=1, request_id="job")
+    run_scripted(eng, clock, [])
+    # once finished the id is free again (retries reuse ticket ids)
+    r2 = eng.submit(np.array([3]), max_new_tokens=1, request_id="job")
+    run_scripted(eng, clock, [])
+    assert r2.done
+
+
+def test_failed_submit_does_not_leak_the_id():
+    eng, clock, _ = make_stub_engine(slots=1, max_len=8)
+    with pytest.raises(ServingError, match="max_len"):
+        eng.submit(np.arange(6), max_new_tokens=5, request_id="job")
+    # the rejected submit must not have registered "job" as in flight
+    r = eng.submit(np.array([1]), max_new_tokens=1, request_id="job")
+    run_scripted(eng, clock, [])
+    assert r.done
+
+
+def test_request_equality_is_identity_not_ndarray_compare():
+    """Regression: dataclass __eq__ compared ndarray prompts elementwise,
+    so Scheduler.pop_next's queue removal raised 'truth value of an
+    array is ambiguous' whenever two queued requests had identical
+    field values.  Requests now compare by identity (eq=False)."""
+    a = Request(id="r0", prompt=np.array([1, 2]), max_new_tokens=1, tier="a")
+    b = Request(id="r0", prompt=np.array([1, 2]), max_new_tokens=1, tier="a")
+    assert a != b and a == a
+    sched = Scheduler(("a",))
+    sched.submit(a, now=0.0)
+    sched.submit(b, now=0.0)
+    assert sched.pop_next("a", now=0.0) is a   # list.remove by identity
+    assert sched.pop_next("a", now=0.0) is b
+    assert sched.pop_next("a", now=0.0) is None
+
+
+def test_engine_drains_identical_content_requests():
+    # end-to-end shape of the same regression: two indistinguishable
+    # payloads queued behind one slot must both retire
+    eng, clock, _ = make_stub_engine(slots=1)
+    a = eng.submit(np.array([7, 7]), max_new_tokens=2)
+    b = eng.submit(np.array([7, 7]), max_new_tokens=2)
+    run_scripted(eng, clock, [])
+    assert a.done and b.done
+    np.testing.assert_array_equal(a.result(), b.result())
+
+
+def test_prefill_cache_is_lru_bounded():
+    from repro.serving.engine import TransformerRunner
+    from repro.session import Session
+
+    sess = Session("qwen3-4b")
+    runner = TransformerRunner(sess.config, sess.params, 1, 16,
+                               prefill_cache_size=2)
+    for L in (2, 3, 4):               # third distinct length evicts the LRU
+        runner.prefill(np.arange(1, L + 1, dtype=np.int32))
+    assert list(runner._prefill) == [3, 4]
+    runner.prefill(np.arange(1, 4, dtype=np.int32))   # hit refreshes 3
+    runner.prefill(np.arange(1, 6, dtype=np.int32))   # new 5 evicts 4
+    assert list(runner._prefill) == [3, 5]
+    with pytest.raises(ServingError, match="prefill_cache_size"):
+        TransformerRunner(sess.config, sess.params, 1, 16,
+                          prefill_cache_size=0)

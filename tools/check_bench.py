@@ -16,6 +16,19 @@ Policy (documented in ``docs/benchmarks.md``):
   is a violation (a silently dropped benchmark is a regression too);
   extra fresh metrics are reported and ignored.
 
+The same gate also validates and diffs the kernel-tuning artifacts
+(``kernels/TUNE_<device>.json``, schema ``repro-tune/1``) via
+``--tune-fresh`` / ``--tune-baseline``:
+
+- structural validity (schema tag, well-formed entries) is gated — a
+  corrupt or truncated artifact is exit code 2;
+- a baseline entry missing from the fresh sweep is a violation (a key
+  silently dropped from the sweep is a coverage regression);
+- block-*choice* changes and timing drift are informational — the
+  winner is a measured property of the host, so CI only requires that
+  the sweep still runs, still covers every key, and still emits a valid
+  table.  Device-kind and fast-mode mismatches are printed as notes.
+
 Exit codes: ``0`` pass, ``1`` tolerance-band violation, ``2`` structured
 error (missing/unreadable file, schema mismatch).
 
@@ -23,6 +36,8 @@ Usage::
 
     python tools/check_bench.py --baseline benchmarks/BENCH_cpu_ci.json \
         BENCH_fresh.json [--tolerance-scale S]
+    python tools/check_bench.py --tune-baseline kernels/TUNE_cpu_ci.json \
+        --tune-fresh /tmp/TUNE_fresh.json
 
 Run by the ``bench`` job in ``.github/workflows/ci.yml`` and by
 ``tests/test_bench_harness.py``.
@@ -47,6 +62,10 @@ TOLERANCES: dict[str, float] = {
     # host-python scheduling overhead vs jitted decode shifts with CI load,
     # so the engine/solo balance wobbles more than pure-kernel ratios
     "serving_vs_solo_generate": 0.75,
+    # tuned-vs-static chunk ratio sits near 1 on CPU (both chunks are
+    # reasonable) and wobbles with load; the gate is that the tuned path
+    # never becomes drastically slower than the static guess
+    "autotuned_vs_static": 0.75,
 }
 
 
@@ -125,36 +144,117 @@ def compare(baseline: dict, fresh: dict, *, tolerance_scale: float = 1.0):
     return violations, infos
 
 
+def load_tune(path: str | Path):
+    """Load + structurally validate a tuning artifact (BenchError on
+    anything ``repro.kernels.autotune.load`` rejects)."""
+    from repro.kernels import autotune
+
+    p = Path(path)
+    if not p.exists():
+        raise BenchError(f"{p}: no such tuning artifact (generate with: "
+                         f"python -m benchmarks.autotune --out {p})")
+    try:
+        return autotune.load(str(p))
+    except autotune.TuneError as e:
+        raise BenchError(str(e))
+
+
+def compare_tune(baseline, fresh):
+    """Diff two TuningTables.  Returns ``(violations, infos)``.
+
+    Coverage is gated (every baseline key must survive); the chosen
+    blocks and their timings are informational — they are measured
+    properties of the host the sweep ran on.
+    """
+    violations, infos = [], []
+    if baseline.device != fresh.device:
+        infos.append(f"note: device kind differs ({baseline.device!r} "
+                     f"baseline vs {fresh.device!r} fresh); block choices "
+                     f"are not comparable across devices")
+    if baseline.meta.get("fast") != fresh.meta.get("fast"):
+        infos.append("note: fast-mode flag differs between baseline and "
+                     "fresh sweep; coverage and timings are not comparable")
+    for key in sorted(baseline.entries):
+        b = baseline.entries[key]
+        f = fresh.entries.get(key)
+        if f is None:
+            violations.append(f"{key}: tuned entry missing from fresh sweep "
+                              f"(baseline block {b['block']})")
+            continue
+        if f["block"] != b["block"]:
+            infos.append(f"{key}: block {b['block']} -> {f['block']} "
+                         f"({b['median_us']:.1f} -> {f['median_us']:.1f} us)")
+        else:
+            infos.append(f"{key}: block {b['block']} unchanged "
+                         f"({b['median_us']:.1f} -> {f['median_us']:.1f} us)")
+    for key in sorted(set(fresh.entries) - set(baseline.entries)):
+        infos.append(f"{key}: new tuned entry (not in baseline) — "
+                     f"block {fresh.entries[key]['block']}")
+    return violations, infos
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="diff a fresh BENCH_*.json against the committed "
-                    "perf-trajectory baseline")
-    ap.add_argument("fresh", help="freshly generated BENCH_*.json")
+                    "perf-trajectory baseline (and/or a fresh "
+                    "TUNE_*.json against the committed tuning artifact)")
+    ap.add_argument("fresh", nargs="?", default=None,
+                    help="freshly generated BENCH_*.json")
     ap.add_argument("--baseline", default=str(REPO / "benchmarks" / "BENCH_cpu_ci.json"),
                     help="committed trajectory artifact (default: "
                          "benchmarks/BENCH_cpu_ci.json)")
     ap.add_argument("--tolerance-scale", type=float, default=1.0,
                     help="scale every tolerance band (e.g. 2.0 to loosen "
                          "all bands 2x on a known-noisy host)")
+    ap.add_argument("--tune-fresh", default=None, metavar="TUNE_JSON",
+                    help="freshly swept kernel-tuning artifact to validate "
+                         "(python -m benchmarks.autotune)")
+    ap.add_argument("--tune-baseline",
+                    default=str(REPO / "kernels" / "TUNE_cpu_ci.json"),
+                    metavar="TUNE_JSON",
+                    help="committed tuning artifact to diff against "
+                         "(default: kernels/TUNE_cpu_ci.json)")
     args = ap.parse_args(argv)
+    if args.fresh is None and args.tune_fresh is None:
+        ap.error("nothing to check: pass a fresh BENCH_*.json and/or "
+                 "--tune-fresh TUNE_*.json")
 
-    try:
-        baseline = load_report(args.baseline)
-        fresh = load_report(args.fresh)
-    except BenchError as e:
-        print(f"ERROR {e}", file=sys.stderr)
-        return 2
+    violations = []
+    sys.path.insert(0, str(REPO / "src"))
+    if args.fresh is not None:
+        try:
+            baseline = load_report(args.baseline)
+            fresh = load_report(args.fresh)
+        except BenchError as e:
+            print(f"ERROR {e}", file=sys.stderr)
+            return 2
+        violations, infos = compare(baseline, fresh,
+                                    tolerance_scale=args.tolerance_scale)
+        for line in infos:
+            print(f"  {line}")
+        for line in violations:
+            print(f"FAIL {line}", file=sys.stderr)
+        n_gated = sum(1 for n, m in baseline["metrics"].items()
+                      if tolerance_for(n, m["unit"]) is not None)
+        print(f"check_bench: {len(baseline['metrics'])} baseline metrics "
+              f"({n_gated} gated), {len(violations)} violation(s)")
 
-    violations, infos = compare(baseline, fresh,
-                                tolerance_scale=args.tolerance_scale)
-    for line in infos:
-        print(f"  {line}")
-    for line in violations:
-        print(f"FAIL {line}", file=sys.stderr)
-    n_gated = sum(1 for n, m in baseline["metrics"].items()
-                  if tolerance_for(n, m["unit"]) is not None)
-    print(f"check_bench: {len(baseline['metrics'])} baseline metrics "
-          f"({n_gated} gated), {len(violations)} violation(s)")
+    if args.tune_fresh is not None:
+        try:
+            tune_base = load_tune(args.tune_baseline)
+            tune_fresh = load_tune(args.tune_fresh)
+        except BenchError as e:
+            print(f"ERROR {e}", file=sys.stderr)
+            return 2
+        t_violations, t_infos = compare_tune(tune_base, tune_fresh)
+        for line in t_infos:
+            print(f"  {line}")
+        for line in t_violations:
+            print(f"FAIL {line}", file=sys.stderr)
+        print(f"check_bench[tune]: {len(tune_base.entries)} baseline "
+              f"entries, {len(t_violations)} violation(s)")
+        violations = violations + t_violations
+
     return 1 if violations else 0
 
 
