@@ -1,0 +1,194 @@
+"""Real-weights accuracy: loaded checkpoints -> measured error per policy.
+
+The compat loop-closer: instead of seeded random init, every session here
+comes out of ``Session.from_pretrained`` on an actual safetensors
+checkpoint (the committed golden fixtures under ``tests/golden/compat/``
+— tiny but real files, sharded for qwen3 — so CI is hermetic; point
+``REPRO_REAL_CHECKPOINT_<FAMILY>`` at a downloaded checkpoint to run the
+same loop full-size).  For each family the benchmark measures, on the
+*loaded* weights:
+
+- task-level degradation per accuracy preset versus the exact baseline —
+  perplexity ratio for qwen3, teacher-forced greedy token disagreement
+  for whisper, top-1 label flips for ResNet — alongside the raw logits
+  MRED the paper's error model speaks in;
+- the ``auto_configure`` loop end to end: the proxy model's
+  ``predicted_error`` versus the *measured* MRED of the adopted policy on
+  the same calibration batch, plus the modeled area reduction it bought.
+
+All values are deterministic model outputs (no wall clock), so every
+metric gates the trajectory via ``tools/check_bench.py`` ("percent" /
+"ratio" units — see ``benchmarks.harness.GATED_UNITS``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+try:
+    from .harness import BenchReport, module_main
+except ImportError:  # run as a script: python benchmarks/<module>.py
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.harness import BenchReport, module_main
+
+#: The committed tiny-but-real fixture checkpoints (tests/golden/compat/
+#: README-less by design: regenerate with tests/golden/gen_compat_golden.py).
+GOLDEN = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                      "tests", "golden", "compat")
+
+#: Accuracy ladder measured against the exact baseline, worst-first so the
+#: printed table reads as a degradation curve.
+POLICIES = ("segmented1", "segmented2", "segmented3")
+
+#: Per-family proxy error budget for the auto_configure loop (MRED of the
+#: calibration logits; same scale Session.auto_configure optimizes).
+BUDGETS = {"qwen3-4b": 0.05, "whisper-tiny": 0.05, "resnet18": 0.05}
+
+
+def _policy_cfg(name):
+    from repro.session import _PRESETS
+
+    return _PRESETS[name]
+
+
+def _lm_eval(sess, seq_len: int):
+    """Teacher-forced eval closure for a loaded LM session: returns
+    ``(logits_fn(policy), targets)`` on a seeded token batch (plus seeded
+    encoder embeddings when the arch has an encoder)."""
+    import jax.numpy as jnp
+
+    from repro.models import transformer
+
+    cfg = sess.config
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab, (2, seq_len))
+    batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+    if cfg.encoder_layers:
+        enc_len = min(cfg.enc_len, seq_len)
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((2, enc_len, cfg.d_model)), jnp.float32)
+
+    def logits(numerics):
+        pcfg = dataclasses.replace(cfg, numerics=numerics) \
+            if numerics is not None else cfg
+        h, _, _ = transformer.backbone(sess.params, pcfg, batch, mode="train")
+        return np.asarray(transformer.logits_fn(sess.params, pcfg, h),
+                          np.float64)
+
+    targets = tokens[:, 1:]  # next-token teacher forcing
+    return logits, targets
+
+
+def _xent(logits: np.ndarray, targets: np.ndarray) -> float:
+    """Mean next-token cross-entropy (nats) of ``logits[:, :-1]`` against
+    ``targets`` — the perplexity exponent."""
+    lp = logits[:, :-1] - logits[:, :-1].max(-1, keepdims=True)
+    lse = np.log(np.exp(lp).sum(-1))
+    picked = np.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return float((lse - picked).mean())
+
+
+def _autoconf_metrics(report, tag: str, sess, family: str, measured_fn,
+                      calib=None):
+    """Run the proxy auto_configure loop on the loaded weights and report
+    predicted vs measured error for the adopted policy."""
+    res = sess.auto_configure(BUDGETS[family], calib=calib)
+    measured = measured_fn(res.policy)
+    predicted = res.predicted_error if res.predicted_error else res.error
+    report.add(f"real_{tag}_autoconf_predicted_mred", 100.0 * predicted,
+               "percent", derived={"budget": BUDGETS[family],
+                                   "n_evals": res.n_evals})
+    report.add(f"real_{tag}_autoconf_measured_mred", 100.0 * measured,
+               "percent", derived={"method": res.method})
+    # the proxy's promise: predictions upper-bound (approximately) the
+    # measured error — the ratio is the trajectory's drift detector
+    report.add(f"real_{tag}_autoconf_measured_vs_predicted",
+               measured / predicted if predicted else 0.0, "ratio")
+    report.add(f"real_{tag}_autoconf_area_reduction",
+               100.0 * res.area_reduction, "percent",
+               derived={"assignments": len(res.assignments)})
+    print(f"  auto_configure: predicted {predicted:.3e} measured "
+          f"{measured:.3e} mred, area -{100 * res.area_reduction:.1f}% "
+          f"({res.n_evals} evals)")
+    return res
+
+
+def _run_lm(report, family: str, tag: str, seq_len: int):
+    from repro.core.metrics import mred
+    from repro.session import Session
+
+    sess = Session.from_pretrained(family, os.path.join(GOLDEN, family))
+    logits, targets = _lm_eval(sess, seq_len)
+    ref = logits(None)
+    ref_xent = _xent(ref, targets)
+    ref_tok = ref.argmax(-1)
+    print(f"\n-- {family} (loaded from fixture checkpoint) --")
+    for pol in POLICIES:
+        got = logits(_policy_cfg(pol))
+        m = mred(got, ref)
+        ppl_ratio = float(np.exp(_xent(got, targets) - ref_xent))
+        disagree = 100.0 * float((got.argmax(-1) != ref_tok).mean())
+        report.add(f"real_{tag}_{pol}_mred", 100.0 * m, "percent",
+                   derived={"seq_len": seq_len})
+        if tag == "qwen3":
+            report.add(f"real_{tag}_{pol}_ppl_ratio", ppl_ratio, "ratio")
+        else:
+            report.add(f"real_{tag}_{pol}_tok_disagree", disagree, "percent")
+        print(f"  {pol}: mred {m:.3e}  ppl-ratio {ppl_ratio:.4f}  "
+              f"greedy-disagree {disagree:.2f}%")
+    _autoconf_metrics(report, tag, sess, family,
+                      lambda policy: mred(logits(policy), ref))
+
+
+def _run_resnet(report, size: int):
+    import jax.numpy as jnp
+
+    from repro.core.metrics import mred
+    from repro.models import resnet
+    from repro.session import Session
+
+    sess = Session.from_pretrained("resnet18", os.path.join(GOLDEN, "resnet18"))
+    cfg = sess.config
+    rng = np.random.default_rng(0)
+    images = jnp.asarray(rng.standard_normal((4, size, size, 3)), jnp.float32)
+
+    def logits(numerics):
+        acfg = dataclasses.replace(cfg, numerics=numerics) \
+            if numerics is not None else cfg
+        out, _ = resnet.apply(sess.params, sess._state, images, acfg,
+                              train=False)
+        return np.asarray(out, np.float64)
+
+    ref = logits(None)
+    ref_top1 = ref.argmax(-1)
+    print("\n-- resnet18 (loaded from fixture checkpoint) --")
+    for pol in POLICIES:
+        got = logits(_policy_cfg(pol))
+        m = mred(got, ref)
+        flips = 100.0 * float((got.argmax(-1) != ref_top1).mean())
+        report.add(f"real_resnet_{pol}_mred", 100.0 * m, "percent",
+                   derived={"size": size})
+        report.add(f"real_resnet_{pol}_top1_mismatch", flips, "percent")
+        print(f"  {pol}: mred {m:.3e}  top1-mismatch {flips:.1f}%")
+    _autoconf_metrics(report, "resnet", sess, "resnet18",
+                      lambda policy: mred(logits(policy), ref),
+                      calib=np.asarray(images))
+
+
+def run(report: BenchReport | None = None):
+    report = report if report is not None else BenchReport()
+    seq_len = 8 if report.fast else 16
+    size = 16 if report.fast else 32
+    print("\n== Real-weights accuracy: fixture checkpoints, measured vs "
+          "predicted error per policy ==")
+    _run_lm(report, "qwen3-4b", "qwen3", seq_len)
+    _run_lm(report, "whisper-tiny", "whisper", seq_len)
+    _run_resnet(report, size)
+
+
+if __name__ == "__main__":
+    module_main(run)

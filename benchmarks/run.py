@@ -43,8 +43,8 @@ def main(argv=None) -> None:
                          "else the static tuning tables")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_kernels, bench_serving, roofline,
-                            table2_ppa, table3_image)
+    from benchmarks import (bench_kernels, bench_serving, real_accuracy,
+                            roofline, table2_ppa, table3_image)
     from benchmarks.harness import BenchReport, activate_tuning
 
     table = activate_tuning(args.tune)
@@ -57,6 +57,7 @@ def main(argv=None) -> None:
     report = BenchReport(fast=args.fast, iters=args.iters)
     table2_ppa.run(report)
     table3_image.run(report)
+    real_accuracy.run(report)
     bench_kernels.run(report)
     roofline.run(report)
     bench_serving.run(report)

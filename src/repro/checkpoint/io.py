@@ -142,3 +142,34 @@ def restore(ckpt_dir: str, tree_like, step: int | None = None,
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree, manifest
+
+
+# ---------------------------------------------------------------------------
+# safetensors interchange (repro.compat)
+# ---------------------------------------------------------------------------
+
+def save_safetensors(path, tree, metadata=None):
+    """Export a params tree as ONE safetensors file through the compat
+    state-dict model (``repro.compat``): dotted native leaf paths, plain
+    host arrays.  Unlike :func:`save` this is the *interchange* format —
+    readable by any safetensors implementation — not the sharded
+    fault-tolerant training format.  Reload with :func:`load_safetensors`;
+    the round trip is bit-exact."""
+    from repro.compat import flatten_tree, write_safetensors
+
+    write_safetensors(path, flatten_tree(tree), metadata)
+
+
+def load_safetensors(path, tree_like=None, *, cast=False):
+    """Load a safetensors checkpoint -> ``(tree, metadata)``.
+
+    With ``tree_like`` the flat state dict is rebuilt into that tree's
+    structure, every leaf validated against its shape/dtype (one-line
+    ``CompatError`` on mismatch; ``cast=True`` converts dtypes).  Without
+    it the raw flat ``{path: array}`` state dict comes back."""
+    from repro.compat import load_checkpoint, unflatten_tree
+
+    sd, meta = load_checkpoint(path)
+    if tree_like is None:
+        return sd, meta
+    return unflatten_tree(tree_like, sd, cast=cast), meta

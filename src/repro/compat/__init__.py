@@ -1,0 +1,25 @@
+"""Pretrained-checkpoint interop: state-dict model, safetensors IO,
+per-family converters (``docs/compat.md``).
+
+The layer between the outside world and the numerics core: real
+qwen3-4b / whisper-tiny / ResNet-18 weights load into our model
+families (``Session.from_pretrained``) so ``auto_configure`` and the
+paper's Table 3/4 accuracy claims can be validated against trained
+weights instead of random init (``benchmarks/real_accuracy.py``).
+"""
+from .state_dict import (CompatError, MapRule, Mapping, flatten_tree,
+                         tree_paths, unflatten_tree)
+from .safetensors_io import (INDEX_SUFFIX, load_checkpoint, read_safetensors,
+                             read_torch_checkpoint, write_safetensors,
+                             write_sharded_checkpoint)
+from .converters import (Converter, LoadedCheckpoint, converter_for,
+                         export_pretrained, families, load_pretrained,
+                         register_converter)
+
+__all__ = [
+    "CompatError", "Converter", "INDEX_SUFFIX", "LoadedCheckpoint",
+    "MapRule", "Mapping", "converter_for", "export_pretrained", "families",
+    "flatten_tree", "load_checkpoint", "load_pretrained", "read_safetensors",
+    "read_torch_checkpoint", "register_converter", "tree_paths",
+    "unflatten_tree", "write_safetensors", "write_sharded_checkpoint",
+]

@@ -242,9 +242,18 @@ class Engine:
 
     def submit(self, prompt, tier: Optional[str] = None,
                max_new_tokens: int = 16, *, request_id: Optional[str] = None,
-               priority: Optional[int] = None, on_token=None) -> Request:
+               priority: Optional[int] = None, on_token=None,
+               eos_id: Optional[int] = None) -> Request:
         """Queue one request; returns the live :class:`Request` handle
-        (its ``tokens``/``done`` fields update as the engine steps)."""
+        (its ``tokens``/``done`` fields update as the engine steps).
+
+        ``eos_id`` retires the request as soon as it emits that token
+        (the EOS is landed as the final token); its KV slot frees the
+        same step, so a waiting request can join the next admit pass.
+        Early stopping never perturbs co-batched rows — tokens stay
+        bit-identical to solo :meth:`repro.session.Session.generate`
+        with the same ``eos_id``.
+        """
         if tier is None:
             tier = next(iter(self._lanes))
         lane = self._lanes.get(tier)
@@ -265,6 +274,7 @@ class Engine:
             priority=(priority if priority is not None
                       else lane.spec.priority),
             on_token=on_token,
+            eos_id=eos_id,
         )
         self._n_submitted += 1
         need = req.prompt.shape[0] + req.max_new_tokens - 1
@@ -283,13 +293,14 @@ class Engine:
         events.append(Event(kind=kind, request_id=req.id, tier=req.tier,
                             step=self._step, time=now, token=token))
         if kind == "token" and req.on_token is not None:
-            req.on_token(req, token, len(req.tokens) >= req.max_new_tokens)
+            req.on_token(req, token, req.complete)
 
     def _land_token(self, events, lane, req, token: int):
         req.tokens.append(int(token))
         lane.stats.n_tokens += 1
         self._emit(events, req, "token", token=int(token))
-        if len(req.tokens) >= req.max_new_tokens:
+        # retire on the max-token cap OR the request's EOS stop token
+        if req.complete:
             req.finish_time = self.clock.now()
             req.finish_step = self._step
             lane.alloc.free(req.slot)

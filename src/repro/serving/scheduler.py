@@ -109,6 +109,7 @@ class Request:
     tier: str
     priority: int = 0
     on_token: Optional[Callable] = None  # on_token(request, token, done)
+    eos_id: Optional[int] = None  # stop token: retire on emitting it
     # -- engine-owned progress ---------------------------------------------
     seq: int = -1               # global arrival sequence number
     arrival_time: float = 0.0
@@ -133,8 +134,19 @@ class Request:
     def done(self) -> bool:
         return self.finish_time is not None
 
+    @property
+    def complete(self) -> bool:
+        """True once the landed tokens satisfy the stop condition: the
+        ``max_new_tokens`` cap, or the ``eos_id`` stop token (the EOS
+        itself is the last landed token)."""
+        if len(self.tokens) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and len(self.tokens) > 0
+                and self.tokens[-1] == self.eos_id)
+
     def result(self) -> np.ndarray:
-        """The generated continuation, (max_new_tokens,) int32."""
+        """The generated continuation, (n,) int32 — ``max_new_tokens``
+        long, or shorter when ``eos_id`` stopped it (EOS included)."""
         if not self.done:
             raise ServingError(f"request {self.id!r} is not finished "
                                f"({len(self.tokens)}/{self.max_new_tokens} "

@@ -115,6 +115,10 @@ class GenerateResult:
     tokens: np.ndarray        # (batch, gen_len) int32 greedy continuations
     seconds: float
     tokens_per_s: float
+    # per-row emitted-token counts (EOS included).  Rows that hit the EOS
+    # stop token have their remaining columns pinned to eos_id; without
+    # eos_id every row is full-length.
+    gen_lengths: Optional[np.ndarray] = None
 
 
 class Session:
@@ -239,6 +243,47 @@ class Session:
         return cls(cfg, policy, backend, seed=seed, params=params,
                    state=state)
 
+    @classmethod
+    def from_pretrained(cls, family: str, path, policy=None,
+                        backend: Optional[str] = None,
+                        mesh: Optional[str] = None, *, cfg=None,
+                        reduced: bool = True, unknown: str = "error",
+                        cast: bool = True, seed: int = 0,
+                        tune=None) -> "Session":
+        """A Session over real pretrained weights (``repro.compat``).
+
+        ``family`` names a registered checkpoint converter (``qwen3-4b``,
+        ``whisper-tiny``, ``resnet18``); ``path`` is a safetensors file,
+        a sharded ``*.safetensors.index.json`` (or a directory holding
+        either), or a torch pickle.  The architecture comes from ``cfg``
+        when given, else the checkpoint's ``repro.config`` metadata, else
+        the registered arch (``reduced`` picking the CPU-sized variant).
+        ``unknown``/``cast`` are forwarded to
+        :func:`repro.compat.load_pretrained`; interop failures surface as
+        one-line :class:`repro.compat.CompatError`\\ s.
+        """
+        from repro import compat
+
+        loaded = compat.load_pretrained(family, path, cfg=cfg,
+                                        reduced=reduced, unknown=unknown,
+                                        cast=cast)
+        if loaded.kind == "resnet":
+            return cls(loaded.cfg, policy, backend, seed=seed,
+                       params=loaded.params, state=loaded.state, tune=tune)
+        return cls(loaded.cfg, policy, backend, mesh, seed=seed,
+                   params=loaded.params, tune=tune)
+
+    def export(self, path) -> None:
+        """Write this session's params (+ ResNet bn state) as a single
+        safetensors checkpoint in the family's foreign naming scheme —
+        the exact inverse of :meth:`from_pretrained`, so an
+        export/reload round trip is bit-exact."""
+        from repro import compat
+
+        foreign, meta = compat.export_pretrained(
+            self.arch_id, self._base_cfg, self.params, self._state)
+        compat.write_safetensors(path, foreign, meta)
+
     # -- layer enumeration / PPA -------------------------------------------
 
     def layer_paths(self) -> list:
@@ -290,11 +335,21 @@ class Session:
         return logits
 
     def generate(self, batch: int = 4, prompt_len: int = 32,
-                 gen_len: int = 16, prompts=None) -> GenerateResult:
+                 gen_len: int = 16, prompts=None,
+                 eos_id: Optional[int] = None) -> GenerateResult:
         """Batched prefill + greedy decode loop (the serve driver).
 
         ``prompts`` (batch, prompt_len) int32 overrides the seeded random
         prompts.  Returns the generated tokens plus wall-clock stats.
+
+        ``eos_id`` enables stop-token handling: a per-row finished mask
+        tracks rows that emitted the token, the loop exits early once
+        every row has, and finished rows' remaining columns come back
+        pinned to ``eos_id`` (``gen_lengths`` carries the true per-row
+        counts, EOS included).  Stopping is bit-transparent: the tokens a
+        row emits before its EOS are identical with and without
+        ``eos_id``, because unfinished rows keep seeing exactly the same
+        batched decode steps.
         """
         if self._family != "lm":
             raise SessionError("generate() is the LM entry point; use "
@@ -334,15 +389,39 @@ class Session:
         logits, state = prefill(params, {"tokens": prompts})
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out = [tok]
+        # the EOS mask lives on the host (it gates the python loop); the
+        # decode itself always advances the full batch, so a row's tokens
+        # are unchanged by other rows finishing
+        finished = (np.asarray(tok)[:, 0] == eos_id
+                    if eos_id is not None else None)
         for i in range(gen_len - 1):
+            if finished is not None and finished.all():
+                break
             logits, state = decode(params, tok, state, jnp.int32(prompt_len + i))
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
             out.append(tok)
+            if finished is not None:
+                finished = finished | (np.asarray(tok)[:, 0] == eos_id)
         jax.block_until_ready(tok)
         dt = time.perf_counter() - t0
         gen = np.asarray(jnp.concatenate(out, axis=1))
-        return GenerateResult(tokens=gen, seconds=dt,
-                              tokens_per_s=batch * gen_len / dt)
+        if eos_id is None:
+            return GenerateResult(tokens=gen, seconds=dt,
+                                  tokens_per_s=batch * gen_len / dt,
+                                  gen_lengths=np.full(batch, gen_len,
+                                                      np.int64))
+        emitted = gen.shape[1]
+        lengths = np.full(batch, gen_len, np.int64)
+        full = np.full((batch, gen_len), eos_id, np.int32)
+        full[:, :emitted] = gen
+        for b in range(batch):
+            hits = np.nonzero(gen[b] == eos_id)[0]
+            if hits.size:
+                lengths[b] = hits[0] + 1
+                full[b, hits[0] + 1:] = eos_id
+        return GenerateResult(tokens=full, seconds=dt,
+                              tokens_per_s=int(lengths.sum()) / dt,
+                              gen_lengths=lengths)
 
     # -- serving (continuous batching) -------------------------------------
 
@@ -522,6 +601,11 @@ def _add_common(ap):
                          "python -m benchmarks.autotune). Default: the "
                          "REPRO_TUNE_FILE env var if set, else the "
                          "static tuning tables")
+    ap.add_argument("--weights", default=None, metavar="CKPT",
+                    help="pretrained checkpoint loaded through the compat "
+                         "converter registered for --arch (safetensors "
+                         "file, sharded *.safetensors.index.json or its "
+                         "directory, or a torch pickle; see docs/compat.md)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full arch config (default: reduced)")
@@ -573,6 +657,9 @@ def build_parser() -> argparse.ArgumentParser:
     g.add_argument("--batch", type=int, default=4)
     g.add_argument("--prompt-len", type=int, default=32)
     g.add_argument("--gen-len", type=int, default=16)
+    g.add_argument("--eos-id", type=int, default=None,
+                   help="stop token: rows retire when they emit it "
+                        "(bit-transparent early exit; default: none)")
 
     sl = sub.add_parser(
         "serve-loop",
@@ -631,16 +718,30 @@ def main(argv=None) -> int:
     # on the reduced config unless --full-size
     reduced = args.reduced if args.cmd == "dryrun" else not args.full_size
     try:
-        sess = Session(args.arch, policy=args.policy, backend=args.backend,
-                       seed=args.seed, reduced=reduced, tune=args.tune)
+        if getattr(args, "weights", None):
+            from repro.compat import CompatError
+
+            try:
+                sess = Session.from_pretrained(
+                    args.arch, args.weights, policy=args.policy,
+                    backend=args.backend, seed=args.seed, reduced=reduced,
+                    tune=args.tune)
+            except CompatError as e:
+                raise SessionError(str(e)) from e
+        else:
+            sess = Session(args.arch, policy=args.policy,
+                           backend=args.backend, seed=args.seed,
+                           reduced=reduced, tune=args.tune)
         if args.cmd == "generate":
             if sess.is_policy:
                 print_ppa_report(sess.ppa_report())
             res = sess.generate(batch=args.batch, prompt_len=args.prompt_len,
-                                gen_len=args.gen_len)
+                                gen_len=args.gen_len, eos_id=args.eos_id)
+            n_tok = (int(res.gen_lengths.sum()) if res.gen_lengths is not None
+                     else res.tokens.size)
             print(f"[session] {args.arch}: {res.tokens.shape[0]}x"
-                  f"{res.tokens.shape[1]} tokens in {res.seconds:.2f}s "
-                  f"({res.tokens_per_s:.1f} tok/s)")
+                  f"{res.tokens.shape[1]} tokens ({n_tok} emitted) in "
+                  f"{res.seconds:.2f}s ({res.tokens_per_s:.1f} tok/s)")
         elif args.cmd == "serve-loop":
             from repro.serving import ServingError
 

@@ -1,0 +1,291 @@
+"""Golden checkpoint fixtures for the compat subsystem (docs/compat.md).
+
+Writes miniature "HF-format" pretrained checkpoints for the three
+converter families under ``tests/golden/compat/`` — real foreign naming
+schemes at the reduced-config sizes — plus, per family, a numpy
+``*_reference.npz`` holding the EXPECTED native state dict.
+
+Independence is the point, twice over:
+
+* the safetensors bytes are produced by :func:`_write_safetensors`
+  below — a from-scratch writer sharing no code with
+  ``repro.compat.safetensors_io`` — so the test's read path is a
+  cross-implementation check of the container format (qwen3 is written
+  *sharded* with a ``model.safetensors.index.json`` to cover the shard
+  path);
+* the reference native arrays are computed right here with explicit
+  numpy transposes/stacks (``w.T``, ``np.transpose(w, (2, 3, 1, 0))``,
+  ``w - 1``), sharing no code with the mapping DSL — the consuming test
+  (``tests/test_compat.py``) asserts ``Session.from_pretrained`` output
+  equals them with ``np.testing.assert_array_equal``, bit-exact.
+
+Run from the repo root to regenerate (fixture sizes are a few hundred
+KB total):
+
+    PYTHONPATH=src python tests/golden/gen_compat_golden.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "compat")
+
+# reduced-config dimensions (mirror ArchConfig.reduced(): d_model=64,
+# heads=4, head_dim=16, d_ff=128, vocab=256, <=2 repeats/encoder layers)
+D, HEADS, KV, HD, FF, VOCAB = 64, 4, 4, 16, 128, 256
+N_LAYERS = 2          # decoder layers (both LM families)
+N_ENC = 2             # whisper encoder layers
+# tiny ResNet (widths/blocks deliberately not the full CIFAR config —
+# the checkpoint's repro.config metadata must carry it)
+R_WIDTHS, R_BLOCKS, R_CLASSES = (4, 8), (1, 1), 10
+
+
+# ---------------------------------------------------------------------------
+# an INDEPENDENT minimal safetensors writer (no repro.compat imports)
+# ---------------------------------------------------------------------------
+
+def _write_safetensors(path, sd, metadata):
+    header = {"__metadata__": {k: str(v) for k, v in metadata.items()}}
+    body = b""
+    for name, arr in sd.items():
+        arr = np.ascontiguousarray(arr, dtype=np.float32)
+        header[name] = {"dtype": "F32", "shape": list(arr.shape),
+                        "data_offsets": [len(body), len(body) + arr.nbytes]}
+        body += arr.tobytes()
+    blob = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(len(blob).to_bytes(8, "little"))
+        f.write(blob)
+        f.write(body)
+
+
+def _write_sharded(dirname, shards, metadata, basename="model"):
+    """shards: list of state dicts -> N shard files + HF index."""
+    n = len(shards)
+    weight_map, total = {}, 0
+    for gi, sd in enumerate(shards):
+        fname = f"{basename}-{gi + 1:05d}-of-{n:05d}.safetensors"
+        _write_safetensors(os.path.join(dirname, fname), sd, metadata)
+        for k, arr in sd.items():
+            weight_map[k] = fname
+            total += np.asarray(arr, np.float32).nbytes
+    with open(os.path.join(dirname, f"{basename}.safetensors.index.json"),
+              "w") as f:
+        json.dump({"metadata": {"total_size": total},
+                   "weight_map": weight_map}, f, indent=1, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# family builders: (foreign state dict, expected native state dict)
+# ---------------------------------------------------------------------------
+
+def _r(rng, *shape):
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+def build_qwen3(rng):
+    foreign, ref = {}, {}
+    foreign["model.embed_tokens.weight"] = _r(rng, VOCAB, D)
+    ref["embed"] = foreign["model.embed_tokens.weight"]
+    per = {k: [] for k in ["ln1", "ln2", "wq", "wk", "wv", "wo",
+                           "qn", "kn", "wi", "wg", "wom"]}
+    for i in range(N_LAYERS):
+        p = f"model.layers.{i}."
+        ln1 = _r(rng, D); ln2 = _r(rng, D)
+        wq = _r(rng, HEADS * HD, D); wk = _r(rng, KV * HD, D)
+        wv = _r(rng, KV * HD, D); wo = _r(rng, D, HEADS * HD)
+        qn = _r(rng, HD); kn = _r(rng, HD)
+        wg = _r(rng, FF, D); wi = _r(rng, FF, D); wom = _r(rng, D, FF)
+        foreign.update({
+            p + "input_layernorm.weight": ln1,
+            p + "post_attention_layernorm.weight": ln2,
+            p + "self_attn.q_proj.weight": wq,
+            p + "self_attn.k_proj.weight": wk,
+            p + "self_attn.v_proj.weight": wv,
+            p + "self_attn.o_proj.weight": wo,
+            p + "self_attn.q_norm.weight": qn,
+            p + "self_attn.k_norm.weight": kn,
+            p + "mlp.gate_proj.weight": wg,
+            p + "mlp.up_proj.weight": wi,
+            p + "mlp.down_proj.weight": wom,
+        })
+        # expected native slices: torch Linear (out,in) -> ours (in,out);
+        # HF rmsnorm weight w -> our scale = w - 1
+        per["ln1"].append(ln1 - 1); per["ln2"].append(ln2 - 1)
+        per["wq"].append(wq.T); per["wk"].append(wk.T)
+        per["wv"].append(wv.T); per["wo"].append(wo.T)
+        per["qn"].append(qn - 1); per["kn"].append(kn - 1)
+        per["wi"].append(wi.T); per["wg"].append(wg.T)
+        per["wom"].append(wom.T)
+    dst = "seg0_p0."
+    ref[dst + "ln1.scale"] = np.stack(per["ln1"])
+    ref[dst + "ln2.scale"] = np.stack(per["ln2"])
+    ref[dst + "attn.wq"] = np.stack(per["wq"])
+    ref[dst + "attn.wk"] = np.stack(per["wk"])
+    ref[dst + "attn.wv"] = np.stack(per["wv"])
+    ref[dst + "attn.wo"] = np.stack(per["wo"])
+    ref[dst + "attn.q_norm.scale"] = np.stack(per["qn"])
+    ref[dst + "attn.k_norm.scale"] = np.stack(per["kn"])
+    ref[dst + "mlp.wi"] = np.stack(per["wi"])
+    ref[dst + "mlp.wg"] = np.stack(per["wg"])
+    ref[dst + "mlp.wo"] = np.stack(per["wom"])
+    foreign["model.norm.weight"] = _r(rng, D)
+    ref["final_norm.scale"] = foreign["model.norm.weight"] - 1
+    # tie_embeddings=True: no lm_head in the checkpoint, none natively
+    return foreign, ref
+
+
+def _whisper_block(rng, foreign, ref_acc, prefix, cross):
+    ln1 = _r(rng, D); ln2 = _r(rng, D)
+    foreign[prefix + "self_attn_layer_norm.weight"] = ln1
+    foreign[prefix + "final_layer_norm.weight"] = ln2
+    ref_acc.setdefault("ln1.scale", []).append(ln1 - 1)
+    ref_acc.setdefault("ln2.scale", []).append(ln2 - 1)
+    for src, dst in [("self_attn.q_proj.weight", "attn.wq"),
+                     ("self_attn.k_proj.weight", "attn.wk"),
+                     ("self_attn.v_proj.weight", "attn.wv"),
+                     ("self_attn.out_proj.weight", "attn.wo")]:
+        w = _r(rng, D, D)
+        foreign[prefix + src] = w
+        ref_acc.setdefault(dst, []).append(w.T)
+    if cross:
+        for src, dst in [("encoder_attn.q_proj.weight", "cross.wq"),
+                         ("encoder_attn.k_proj.weight", "cross.wk"),
+                         ("encoder_attn.v_proj.weight", "cross.wv"),
+                         ("encoder_attn.out_proj.weight", "cross.wo")]:
+            w = _r(rng, D, D)
+            foreign[prefix + src] = w
+            ref_acc.setdefault(dst, []).append(w.T)
+        lnc = _r(rng, D)
+        foreign[prefix + "encoder_attn_layer_norm.weight"] = lnc
+        ref_acc.setdefault("ln_cross.scale", []).append(lnc - 1)
+    fc1 = _r(rng, FF, D); fcg = _r(rng, FF, D); fc2 = _r(rng, D, FF)
+    foreign[prefix + "fc1.weight"] = fc1
+    foreign[prefix + "fc_gate.weight"] = fcg   # gated-MLP extension key
+    foreign[prefix + "fc2.weight"] = fc2
+    ref_acc.setdefault("mlp.wi", []).append(fc1.T)
+    ref_acc.setdefault("mlp.wg", []).append(fcg.T)
+    ref_acc.setdefault("mlp.wo", []).append(fc2.T)
+
+
+def build_whisper(rng):
+    foreign, ref = {}, {}
+    foreign["model.decoder.embed_tokens.weight"] = _r(rng, VOCAB, D)
+    ref["embed"] = foreign["model.decoder.embed_tokens.weight"]
+    dec = {}
+    for i in range(N_LAYERS):
+        _whisper_block(rng, foreign, dec, f"model.decoder.layers.{i}.",
+                       cross=True)
+    for k, slices in dec.items():
+        ref["seg0_p0." + k] = np.stack(slices)
+    foreign["model.decoder.layer_norm.weight"] = _r(rng, D)
+    ref["final_norm.scale"] = foreign["model.decoder.layer_norm.weight"] - 1
+    proj = _r(rng, VOCAB, D)
+    foreign["proj_out.weight"] = proj
+    ref["unembed"] = proj.T
+    enc = {}
+    for i in range(N_ENC):
+        _whisper_block(rng, foreign, enc, f"model.encoder.layers.{i}.",
+                       cross=False)
+    for k, slices in enc.items():
+        ref["encoder.blocks." + k] = np.stack(slices)
+    foreign["model.encoder.layer_norm.weight"] = _r(rng, D)
+    ref["encoder.norm.scale"] = foreign["model.encoder.layer_norm.weight"] - 1
+    return foreign, ref
+
+
+def _resnet_bn(rng, foreign, ref, src, dst, c):
+    w, b = _r(rng, c), _r(rng, c)
+    mean, var = _r(rng, c), np.abs(_r(rng, c)) + 0.5
+    foreign[src + "weight"] = w
+    foreign[src + "bias"] = b
+    foreign[src + "running_mean"] = mean
+    foreign[src + "running_var"] = var
+    ref[dst + "scale"] = w
+    ref[dst + "bias"] = b
+    ref[dst + "mean"] = mean
+    ref[dst + "var"] = var
+
+
+def build_resnet(rng):
+    foreign, ref = {}, {}
+
+    def conv(src, dst, cin, cout, k):
+        w = _r(rng, cout, cin, k, k)                      # torch OIHW
+        foreign[src] = w
+        ref[dst] = np.transpose(w, (2, 3, 1, 0))          # ours HWIO
+
+    conv("conv1.weight", "stem", 3, R_WIDTHS[0], 3)
+    _resnet_bn(rng, foreign, ref, "bn1.", "bn_stem.", R_WIDTHS[0])
+    cin = R_WIDTHS[0]
+    for si, (w, n) in enumerate(zip(R_WIDTHS, R_BLOCKS)):
+        for bi in range(n):
+            src, dst = f"layer{si + 1}.{bi}.", f"s{si}b{bi}."
+            stride = 2 if (si > 0 and bi == 0) else 1
+            conv(src + "conv1.weight", dst + "conv1", cin, w, 3)
+            conv(src + "conv2.weight", dst + "conv2", w, w, 3)
+            _resnet_bn(rng, foreign, ref, src + "bn1.", dst + "bn1.", w)
+            _resnet_bn(rng, foreign, ref, src + "bn2.", dst + "bn2.", w)
+            if stride != 1 or cin != w:
+                conv(src + "downsample.0.weight", dst + "proj", cin, w, 1)
+                _resnet_bn(rng, foreign, ref, src + "downsample.1.",
+                           dst + "bn_proj.", w)
+            cin = w
+    fc = _r(rng, R_CLASSES, R_WIDTHS[-1])
+    foreign["fc.weight"] = fc
+    ref["fc"] = fc.T
+    foreign["fc.bias"] = _r(rng, R_CLASSES)
+    ref["fc_b"] = foreign["fc.bias"]
+    return foreign, ref
+
+
+# ---------------------------------------------------------------------------
+
+def main():
+    rng = np.random.default_rng(20260807)
+
+    qwen_dir = os.path.join(OUT, "qwen3-4b")
+    whisper_dir = os.path.join(OUT, "whisper-tiny")
+    resnet_dir = os.path.join(OUT, "resnet18")
+    for d in (qwen_dir, whisper_dir, resnet_dir):
+        os.makedirs(d, exist_ok=True)
+
+    foreign, ref = build_qwen3(rng)
+    meta = {"format": "repro-compat/1", "repro.family": "qwen3-4b",
+            "repro.config": json.dumps({"arch_id": "qwen3-4b",
+                                        "reduced": True})}
+    # split mid-layer across two shards to exercise the index path
+    names = list(foreign)
+    half = len(names) // 2
+    _write_sharded(qwen_dir,
+                   [{k: foreign[k] for k in names[:half]},
+                    {k: foreign[k] for k in names[half:]}], meta)
+    np.savez(os.path.join(OUT, "qwen3-4b_reference.npz"), **ref)
+    print(f"qwen3-4b: {len(foreign)} foreign tensors, sharded x2")
+
+    foreign, ref = build_whisper(rng)
+    meta = {"format": "repro-compat/1", "repro.family": "whisper-tiny",
+            "repro.config": json.dumps({"arch_id": "whisper-tiny",
+                                        "reduced": True})}
+    _write_safetensors(os.path.join(whisper_dir, "model.safetensors"),
+                       foreign, meta)
+    np.savez(os.path.join(OUT, "whisper-tiny_reference.npz"), **ref)
+    print(f"whisper-tiny: {len(foreign)} foreign tensors")
+
+    foreign, ref = build_resnet(rng)
+    meta = {"format": "repro-compat/1", "repro.family": "resnet18",
+            "repro.config": json.dumps({"num_classes": R_CLASSES,
+                                        "widths": list(R_WIDTHS),
+                                        "blocks": list(R_BLOCKS)})}
+    _write_safetensors(os.path.join(resnet_dir, "model.safetensors"),
+                       foreign, meta)
+    np.savez(os.path.join(OUT, "resnet18_reference.npz"), **ref)
+    print(f"resnet18: {len(foreign)} foreign tensors")
+
+
+if __name__ == "__main__":
+    main()

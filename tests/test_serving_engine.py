@@ -167,6 +167,54 @@ def test_kv_slot_reuse_after_retirement():
     assert eng._lanes["a"].alloc.owners == {}     # drained clean
 
 
+def test_eos_retires_early_with_truncated_result():
+    prompt = np.array([3, 1, 4])
+    ref = stub_reference(prompt, 8)
+    eos = int(ref[2])                 # third token of the deterministic stream
+    eng, clock, _ = make_stub_engine(slots=2)
+    r = eng.submit(prompt, max_new_tokens=8, eos_id=eos)
+    run_scripted(eng, clock, [])
+    assert r.done and len(r.tokens) == 3          # stopped at the EOS
+    np.testing.assert_array_equal(r.result(), ref[:3])
+    assert r.result()[-1] == eos                  # EOS itself is landed
+
+
+def test_eos_frees_slot_for_waiting_request():
+    prompt = np.array([3, 1, 4])
+    eos = int(stub_reference(prompt, 8)[1])
+    eng, clock, _ = make_stub_engine(slots=1)
+    a = eng.submit(prompt, max_new_tokens=8, eos_id=eos)
+    b = eng.submit(np.array([9, 9]), max_new_tokens=2)
+    run_scripted(eng, clock, [])
+    # a stopped at step 2 of 8, so b admitted far earlier than a's cap
+    assert len(a.tokens) == 2
+    assert a.slot == b.slot == 0                  # slot recycled
+    assert b.admit_step > a.finish_step
+    np.testing.assert_array_equal(b.result(), stub_reference([9, 9], 2))
+
+
+def test_eos_never_emitted_runs_to_cap():
+    prompt = np.array([5, 6])
+    ref = stub_reference(prompt, 4)
+    eos = int(max(ref) + 1)                       # not in the stream
+    eng, clock, _ = make_stub_engine(slots=1)
+    r = eng.submit(prompt, max_new_tokens=4, eos_id=eos)
+    run_scripted(eng, clock, [])
+    np.testing.assert_array_equal(r.result(), ref)
+
+
+def test_eos_on_token_callback_reports_done():
+    prompt = np.array([2, 7, 1])
+    ref = stub_reference(prompt, 8)
+    eos = int(ref[1])
+    seen = []
+    eng, clock, _ = make_stub_engine(slots=1)
+    eng.submit(prompt, max_new_tokens=8, eos_id=eos,
+               on_token=lambda req, tok, done: seen.append((tok, done)))
+    run_scripted(eng, clock, [])
+    assert seen == [(int(ref[0]), False), (eos, True)]
+
+
 # ---------------------------------------------------------------------------
 # starvation-freedom under aging
 # ---------------------------------------------------------------------------

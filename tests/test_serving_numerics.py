@@ -92,6 +92,29 @@ def test_late_arrivals_bit_equal_to_solo(lm_session, rng):
     _check_against_solo(lm_session, reqs)
 
 
+def test_eos_bit_equal_to_solo_generate(lm_session, rng):
+    """EOS early-stopping in the engine lands exactly the tokens a solo
+    ``Session.generate`` with the same ``eos_id`` keeps (its pre-padding
+    prefix), and never perturbs a co-batched row without an EOS."""
+    vocab = lm_session.config.vocab
+    prompt = rng.integers(0, vocab, 5)
+    other = rng.integers(0, vocab, 4)
+    sess = lm_session.replace(policy=POLICY["premium"])
+    base = sess.generate(prompts=prompt[None], gen_len=8)
+    eos = int(base.tokens[0, 2])      # stops the stream three tokens in
+    solo = sess.generate(prompts=prompt[None], gen_len=8, eos_id=eos)
+    n = int(solo.gen_lengths[0])
+    assert n < 8                      # the stop really triggered
+
+    eng = lm_session.serving_engine(TIERS, slots=2, max_len=16)
+    r_eos = eng.submit(prompt, tier="premium", max_new_tokens=8, eos_id=eos)
+    r_full = eng.submit(other, tier="premium", max_new_tokens=8)
+    eng.run()
+    np.testing.assert_array_equal(r_eos.result(), solo.tokens[0, :n])
+    solo_full = sess.generate(prompts=other[None], gen_len=8)
+    np.testing.assert_array_equal(r_full.result(), solo_full.tokens[0])
+
+
 # ---------------------------------------------------------------------------
 # property: arrival schedules never change tokens (stub rig)
 # ---------------------------------------------------------------------------

@@ -205,6 +205,48 @@ def test_session_generate_result_stats_contract(gen_session, rng):
                                         gen_session.config.vocab).all()
     assert res.seconds > 0
     assert res.tokens_per_s == pytest.approx(2 * 4 / res.seconds)
+    # without eos_id every row is full length
+    np.testing.assert_array_equal(res.gen_lengths, [4, 4])
+
+
+def test_session_generate_eos_bit_transparent(gen_session, rng):
+    """EOS stopping never changes a row's pre-EOS tokens: rows that hit
+    the stop token match the no-eos run up to (and including) the EOS and
+    come back pinned to it after; rows that never hit it are identical
+    end to end."""
+    P = rng.integers(0, gen_session.config.vocab, (3, 6))
+    base = gen_session.generate(prompts=P, gen_len=8)
+    eos = int(base.tokens[0, 2])  # some token row 0 emits mid-stream
+    res = gen_session.generate(prompts=P, gen_len=8, eos_id=eos)
+    assert res.tokens.shape == base.tokens.shape  # padded, shape-stable
+    stopped = 0
+    for b in range(3):
+        row = base.tokens[b]
+        hits = np.nonzero(row == eos)[0]
+        if hits.size:
+            n = hits[0] + 1
+            stopped += 1
+            np.testing.assert_array_equal(res.tokens[b, :n], row[:n])
+            assert (res.tokens[b, n:] == eos).all()
+            assert res.gen_lengths[b] == n
+        else:
+            np.testing.assert_array_equal(res.tokens[b], row)
+            assert res.gen_lengths[b] == 8
+    assert stopped >= 1  # eos chosen from an emitted token: row 0 stops
+    assert res.tokens_per_s == pytest.approx(
+        int(res.gen_lengths.sum()) / res.seconds)
+
+
+def test_session_generate_eos_all_rows_exit_early(gen_session, rng):
+    """When every row has finished the decode loop stops instead of
+    burning the remaining steps; output is still (batch, gen_len)."""
+    P = rng.integers(0, gen_session.config.vocab, (1, 6))
+    base = gen_session.generate(prompts=P, gen_len=8)
+    eos = int(base.tokens[0, 0])  # very first emitted token
+    res = gen_session.generate(prompts=P, gen_len=8, eos_id=eos)
+    assert res.tokens.shape == (1, 8)
+    assert res.gen_lengths[0] == 1
+    assert (res.tokens[0] == eos).all()
 
 
 # ---------------------------------------------------------------------------
