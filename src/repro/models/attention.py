@@ -103,7 +103,17 @@ def _mask_for(qp, kp, kvalid, causal, window):
 
 def blockwise_attention(q, k, v, *, causal=True, window=None, attn_cap=None,
                         q_chunk=1024, kv_chunk=1024, q_offset=0):
-    """Keyword-friendly wrapper around the custom-VJP implementation."""
+    """Keyword-friendly wrapper around the custom-VJP implementation.
+
+    A traced ``q_offset`` (serving's chunked prefill jits the chunk start)
+    cannot ride in ``nondiff_argnums``, so it routes directly to the
+    forward impl — same bits (the custom-VJP wrapper computes its forward
+    with the identical call); only training memory behaviour differs, and
+    the serving path never differentiates."""
+    if isinstance(q_offset, jax.Array):
+        out, _ = _blockwise_fwd_impl(q, k, v, causal, window, attn_cap,
+                                     q_chunk, kv_chunk, q_offset)
+        return out
     return _blockwise_attention_cv(q, k, v, causal, window, attn_cap,
                                    q_chunk, kv_chunk, q_offset)
 
@@ -314,15 +324,31 @@ def gqa_apply(params, x, cfg, spec, positions,
             "v": logical_constraint(v, ("batch", "kv_seq", None, None)),
         }
     else:
-        # decode: S == 1; update cache at q_offset (scalar, or (B,) vector
-        # under continuous batching), attend full cache
+        # decode (S == 1) or chunked prefill (S > 1, scalar q_offset):
+        # update cache at q_offset (scalar, or (B,) vector under
+        # continuous batching), attend full cache
         k_cache = _cache_update(cache["k"], k, q_offset)
         v_cache = _cache_update(cache["v"], v, q_offset)
         k_cache = logical_constraint(k_cache, ("batch", "kv_seq", None, None))
         v_cache = logical_constraint(v_cache, ("batch", "kv_seq", None, None))
-        out = decode_attention(
-            q, k_cache, v_cache, q_offset, window=window, attn_cap=cfg.attn_softcap
-        )
+        if S > 1:
+            # chunked prefill: blockwise online softmax over the updated
+            # cache — the same kernel the no-cache prefill path runs.
+            # Cache rows from earlier chunks hold the bits a full prefill
+            # would cast (bf16 store-then-read == one direct rounding)
+            # and rows past the frontier mask to exact zero contributions,
+            # so the chunk's outputs match the solo prefill bit-for-bit.
+            out = blockwise_attention(
+                q, _repeat_kv(k_cache, H // KH), _repeat_kv(v_cache, H // KH),
+                causal=causal, window=window, attn_cap=cfg.attn_softcap,
+                q_offset=q_offset,
+            )
+            out = logical_constraint(out, ("batch", None, "heads", None))
+        else:
+            out = decode_attention(
+                q, k_cache, v_cache, q_offset, window=window,
+                attn_cap=cfg.attn_softcap
+            )
         new_cache = {"k": k_cache, "v": v_cache}
 
     out = out.astype(x.dtype).reshape(B, S, H * hd)
@@ -430,6 +456,31 @@ def mla_apply(params, x, cfg, spec, positions, cache=None, q_offset=0):
             "kpe": logical_constraint(k_pe.reshape(B, S, dr),
                                       ("batch", "kv_seq", None)),
         }
+    elif S > 1:
+        # chunked prefill: EXPANDED form over the updated latent cache.
+        # The absorbed decode form below is mathematically equal but
+        # bitwise different (different contraction order); re-expanding
+        # the cached latent into per-head K/V reproduces the no-cache
+        # prefill bits exactly, which is what keeps chunked serving
+        # bit-identical to solo generation.
+        ckv_c = _cache_update(cache["ckv"], ckv, q_offset)
+        kpe_c = _cache_update(cache["kpe"], k_pe.reshape(B, S, dr), q_offset)
+        ckv_c = logical_constraint(ckv_c, ("batch", "kv_seq", None))
+        kpe_c = logical_constraint(kpe_c, ("batch", "kv_seq", None))
+        Lc = ckv_c.shape[1]
+        ckv_x = ckv_c.astype(x.dtype)
+        q_nope = logical_constraint(q_nope, ("batch", None, "heads", None))
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv_x, wk_b.astype(x.dtype))
+        v = jnp.einsum("bsr,rhd->bshd", ckv_x, wv_b.astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe_c.astype(x.dtype)[:, :, None, :],
+                                      (B, Lc, H, dr))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = blockwise_attention(qf, k,
+                                  jnp.pad(v, ((0, 0),) * 3 + ((0, dn + dr - dv),)),
+                                  causal=True, q_offset=q_offset)
+        out = out[..., :dv]
+        new_cache = {"ckv": ckv_c, "kpe": kpe_c}
     else:
         # decode: absorbed form — project q into the latent space and attend
         # the latent cache directly (never materialize per-head K/V).

@@ -8,14 +8,16 @@
 >>> r.result()          # bit-identical to a solo Session.generate
 
 Design: ``docs/serving.md``.  Scheduling/queueing in
-:mod:`repro.serving.scheduler`, the pooled KV cache in
+:mod:`repro.serving.scheduler`, the paged KV cache in
 :mod:`repro.serving.kvcache`, the batching loop in
 :mod:`repro.serving.engine`.
 """
 from repro.serving.engine import (Engine, Event, ModelRunner, TierStats,
                                   TransformerRunner)
-from repro.serving.kvcache import (ServingError, SlotAllocator, pool_init,
-                                   read_slot, write_slot)
+from repro.serving.kvcache import (PageAllocator, ServingError, SlotAllocator,
+                                   gather_state, paged_layout,
+                                   paged_pool_init, pages_for, scatter_chunk,
+                                   scatter_token, write_state, zero_pages)
 from repro.serving.scheduler import (DEFAULT_TIERS, FakeClock, MonotonicClock,
                                      Request, Scheduler, TierSpec)
 
@@ -26,6 +28,7 @@ __all__ = [
     "FakeClock",
     "ModelRunner",
     "MonotonicClock",
+    "PageAllocator",
     "Request",
     "Scheduler",
     "ServingError",
@@ -33,7 +36,12 @@ __all__ = [
     "TierSpec",
     "TierStats",
     "TransformerRunner",
-    "pool_init",
-    "read_slot",
-    "write_slot",
+    "gather_state",
+    "paged_layout",
+    "paged_pool_init",
+    "pages_for",
+    "scatter_chunk",
+    "scatter_token",
+    "write_state",
+    "zero_pages",
 ]

@@ -120,6 +120,10 @@ class Request:
     slot: Optional[int] = None
     pos: int = 0                # next absolute decode position
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # -- paged-KV progress (engine-owned) ----------------------------------
+    prefill_pos: int = 0        # prompt positions prefilled so far
+    pages: List[int] = dataclasses.field(default_factory=list)
+    n_reserved_pages: int = 0   # full worst-case reservation at admission
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -199,12 +203,20 @@ class Scheduler:
             return 0
         return req.priority
 
-    def pop_next(self, tier: str, now: float) -> Optional[Request]:
-        """The next request to admit for ``tier`` (or None): lowest
-        effective priority first, FIFO (arrival seq) within a priority."""
+    def peek_next(self, tier: str, now: float) -> Optional[Request]:
+        """The request :meth:`pop_next` would return, without removing it.
+        Admission peeks first so a head request whose page reservation
+        does not fit yet BLOCKS the queue (head-of-line) instead of being
+        popped-and-requeued, which would forfeit its FIFO position."""
         q = self._queues[tier]
         if not q:
             return None
-        best = min(q, key=lambda r: (self.effective_priority(r, now), r.seq))
-        q.remove(best)
+        return min(q, key=lambda r: (self.effective_priority(r, now), r.seq))
+
+    def pop_next(self, tier: str, now: float) -> Optional[Request]:
+        """The next request to admit for ``tier`` (or None): lowest
+        effective priority first, FIFO (arrival seq) within a priority."""
+        best = self.peek_next(tier, now)
+        if best is not None:
+            self._queues[tier].remove(best)
         return best

@@ -426,21 +426,28 @@ class Session:
     # -- serving (continuous batching) -------------------------------------
 
     def serving_engine(self, tiers=None, *, slots: int = 4,
-                       max_len: int = 64, clock=None, aging=None,
+                       max_len: int = 64, page_size=None, pages=None,
+                       prefill_chunk=None, clock=None, aging=None,
                        prefill_cache=None):
         """A continuous-batching :class:`repro.serving.Engine` over this
-        session's resident weights: one KV-slot pool + one resident
+        session's resident weights: one paged KV pool + one resident
         compiled decode per accuracy tier, requests joining mid-decode
         (design: ``docs/serving.md``).
 
         ``tiers`` is a sequence of :class:`repro.serving.TierSpec`
         (default: the premium/standard/bulk SLA ladder); each tier's
         ``policy`` goes through the same coercion as ``Session(policy=...)``.
-        ``prefill_cache`` bounds each lane's per-prompt-length jitted
-        prefill cache (LRU; default 32 lengths).  Continuous batching
-        never changes a request's numerics — every request's tokens are
-        bit-identical to a solo :meth:`generate` of the same prompt under
-        that tier's policy.
+        ``page_size`` sets the KV page granularity (default 16 tokens) and
+        ``pages`` the physical pool per tier (default ``slots *
+        ceil(max_len / page_size)``); a request reserves only the pages
+        its own ``prompt + max_new - 1`` positions need.
+        ``prefill_chunk`` (default 32) bounds the prompt tokens prefilled
+        per engine step, so long prompts interleave with in-flight
+        decodes; ``prefill_cache`` bounds each lane's compiled
+        prefill-shape cache (LRU; default 32 shapes).  Continuous
+        batching never changes a request's numerics — every request's
+        tokens are bit-identical to a solo :meth:`generate` of the same
+        prompt under that tier's policy.
         """
         if self._family != "lm":
             raise SessionError("serving_engine() is the LM entry point; "
@@ -449,6 +456,8 @@ class Session:
 
         tiers = DEFAULT_TIERS if tiers is None else tuple(tiers)
         return Engine.from_session(self, tiers, slots=slots, max_len=max_len,
+                                   page_size=page_size, pages=pages,
+                                   prefill_chunk=prefill_chunk,
                                    clock=clock, aging=aging,
                                    prefill_cache=prefill_cache)
 
@@ -676,7 +685,17 @@ def build_parser() -> argparse.ArgumentParser:
     sl.add_argument("--slots", type=int, default=4,
                     help="KV-pool slots per tier")
     sl.add_argument("--max-len", type=int, default=64,
-                    help="pooled KV-cache length per slot")
+                    help="per-request KV position cap")
+    sl.add_argument("--page-size", type=int, default=None,
+                    help="tokens per paged-KV page (default 16); requests "
+                         "reserve only the pages their own length needs")
+    sl.add_argument("--pages", type=int, default=None,
+                    help="physical KV pages per tier (default: "
+                         "slots * ceil(max_len / page_size))")
+    sl.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens prefilled per engine step "
+                         "(default 32); long prompts interleave with "
+                         "in-flight decodes")
     sl.add_argument("--prompt-len", type=int, default=16)
     sl.add_argument("--gen-len", type=int, default=16)
     sl.add_argument("--aging", type=float, default=None,
@@ -749,6 +768,9 @@ def main(argv=None) -> int:
             try:
                 eng = sess.serving_engine(tiers, slots=args.slots,
                                           max_len=args.max_len,
+                                          page_size=args.page_size,
+                                          pages=args.pages,
+                                          prefill_chunk=args.prefill_chunk,
                                           aging=args.aging)
                 rng = np.random.default_rng(args.seed)
                 for i in range(args.requests):

@@ -1,20 +1,35 @@
-"""Golden-vector generator: KV-pool scatter/gather vs a dense reference.
+"""Golden-vector generator: paged KV scatter/gather vs a dense reference.
 
-An independent reference implementation of the slot-boundary data
-movement in ``repro.serving.kvcache`` — plain numpy slice assignment on
-dense arrays, deliberately sharing NO code with ``write_slot`` /
-``read_slot`` (which go through ``jnp.take`` + ``.at[...].set``).  The
-synthetic pool mimics the transformer serving-state pytree: a ``layers``
-list of per-phase leaf dicts with the slot axis at 1 (leaves are stacked
-``(repeats, slot, max_len, ...)``) plus an ``enc_out`` leaf with the slot
-axis at 0.
+An independent numpy reference implementation of the page-boundary data
+movement in ``repro.serving.kvcache`` — the page-table indirection is
+done BY HAND (explicit per-position python loops over
+``table[pos // page_size]``), deliberately sharing NO code with
+``write_state`` / ``scatter_chunk`` / ``scatter_token`` /
+``gather_state`` / ``zero_pages`` (which go through vectorized
+``jnp.take_along_axis`` + ``.at[...].set``).
 
-The fixture pins CRC32 checksums of every pool leaf after a scripted
-sequence of slot writes (including an overwrite of an occupied slot — the
-no-stale-bits property) and of every gathered leaf of each slot read.
-The consuming test (``tests/test_kvcache.py``) rebuilds the same inputs,
-replays the script through the real scatter/gather, and compares
-checksums — bit-exact, no tolerance.
+The synthetic pool mimics the paged transformer serving state
+(:func:`repro.serving.paged_pool_init`): segment 0 carries paged
+attention leaves ``(repeats, n_pages + 1, page_size, feat...)`` —
+physical id ``n_pages`` is the null page — and segment 1 carries
+per-slot SSM-like leaves ``(repeats, n_slots, ...)`` with no sequence
+axis.  The script exercises:
+
+- a whole-state install through a FRAGMENTED out-of-order page table
+  whose last page is only partially filled;
+- prefill-chunk scatters, including one that OVERWRITES already
+  occupied pages end to end (last-write-wins, no blending);
+- a decode-token scatter whose inactive row carries a null page table
+  (its garbage row must land in the null page, never a live one);
+- a page re-zero of freed pages;
+- gathers back through fragmented tables that include null entries.
+
+The fixture stores the reference pool/gather leaves verbatim (small
+float32 arrays; JSON decimal repr round-trips them bit-exactly) plus
+CRC32 pins of every leaf.  The consuming test
+(``tests/test_kvcache.py``) rebuilds the same inputs, replays the
+script through the REAL kvcache functions, and compares with
+``assert_array_equal`` — bit-exact, no tolerance.
 
 Run from the repo root to regenerate ``tests/golden/kvcache_golden.json``:
 
@@ -28,23 +43,61 @@ import zlib
 
 import numpy as np
 
-N_SLOTS = 3
-MAX_LEN = 6
+N_SLOTS = 2
+PAGE_SIZE = 3
+N_PAGES = 5                      # physical pages; id N_PAGES is the null page
+MAX_PAGES = 2                    # page-table row width
+DENSE_LEN = MAX_PAGES * PAGE_SIZE  # positions a full table row covers
 
-#: leaf path -> full pool shape.  ``layers.{i}.{phase}.{name}`` leaves
-#: carry the slot axis at 1; ``enc_out`` at 0.  Shapes are deliberately
-#: heterogeneous (attention-like 4-D, conv/ssm-like 3-D and 4-D ranks).
+#: leaf path -> full pool shape.  ``layers.{i}.{phase}.{name}``; segment 0
+#: leaves are paged (page axis at 1, page_size axis at 2), segment 1
+#: leaves are per-slot (slot axis at 1, no sequence axis) — the two
+#: storage granularities of ``paged_pool_init``.
 LEAVES = {
-    "layers.0.0.k": (2, N_SLOTS, MAX_LEN, 4),
-    "layers.0.0.v": (2, N_SLOTS, MAX_LEN, 4),
+    "layers.0.0.k": (2, N_PAGES + 1, PAGE_SIZE, 4),
+    "layers.0.0.v": (2, N_PAGES + 1, PAGE_SIZE, 4),
     "layers.1.0.conv": (1, N_SLOTS, 3, 2),
     "layers.1.0.state": (1, N_SLOTS, 2, 3, 2),
-    "enc_out": (N_SLOTS, 4, 2),
 }
+PAGED = ("layers.0.0.k", "layers.0.0.v")
 
-#: (slot, state_seed) per write, in order.  Slot 1 is written twice: the
-#: second write must fully overwrite the first occupant's bits.
-SCRIPT = [(1, 10), (0, 11), (1, 12)]
+
+def _dense_shapes(rows: int, length: int) -> dict:
+    """Request-side (dense) leaf shapes for one op: paged leaves carry
+    ``rows`` batch rows and a ``length``-position sequence axis; per-slot
+    leaves just carry ``rows``."""
+    out = {}
+    for p, full in LEAVES.items():
+        if p in PAGED:
+            out[p] = [full[0], rows, length] + list(full[3:])
+        else:
+            out[p] = [full[0], rows] + list(full[2:])
+    return out
+
+
+#: The scripted op sequence.  Page tables are deliberately fragmented and
+#: out of order; op 2 fully overwrites pages occupied by ops 0-1; op 3's
+#: row 1 is inactive (all-null table) so its write must land in the null
+#: page; op 4 re-zeroes two freed pages.
+SCRIPT = [
+    {"op": "write_state", "slot": 0, "table": [3, 1], "l_buf": 5,
+     "seed": 10, "dense": _dense_shapes(1, 5)},
+    {"op": "scatter_chunk", "table": [0, 4], "start": 2, "length": 3,
+     "seed": 11, "dense": _dense_shapes(1, DENSE_LEN)},
+    {"op": "scatter_chunk", "table": [3, 0], "start": 0, "length": 6,
+     "seed": 12, "dense": _dense_shapes(1, DENSE_LEN)},
+    {"op": "scatter_token", "tables": [[1, 2], [N_PAGES, N_PAGES]],
+     "pos": [4, 0], "seed": 13, "dense": _dense_shapes(N_SLOTS, DENSE_LEN)},
+    {"op": "zero_pages", "pages": [3, 1]},
+]
+
+#: Page tables to gather back through — fragmented, out of order, and
+#: with null entries (which read whatever the null page holds; the real
+#: engine's decode math masks those positions away).
+GATHERS = [
+    [[3, 1], [0, N_PAGES]],
+    [[N_PAGES, N_PAGES], [4, 2]],
+]
 
 
 def leaf_values(path: str, shape, seed: int) -> np.ndarray:
@@ -55,38 +108,78 @@ def leaf_values(path: str, shape, seed: int) -> np.ndarray:
     return rng.standard_normal(shape).astype(np.float32)
 
 
-def request_shape(path: str, shape):
-    """The batch-1 (single-request) version of a pool leaf shape."""
-    axis = 0 if path == "enc_out" else 1
-    return tuple(1 if i == axis else d for i, d in enumerate(shape))
-
-
 def crc(a: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(a, np.float32).tobytes())
 
 
+def apply_script(pool: dict) -> dict:
+    """Replay ``SCRIPT`` over ``pool`` (leaf path -> array, mutated in
+    place) with hand-done page-table indirection: every position is
+    routed through ``table[pos // PAGE_SIZE]`` one at a time."""
+    for op in SCRIPT:
+        if op["op"] == "zero_pages":
+            for p in PAGED:
+                for page in op["pages"]:
+                    pool[p][:, page] = 0.0
+            continue
+        dense = {p: leaf_values(p, tuple(s), op["seed"])
+                 for p, s in op["dense"].items()}
+        if op["op"] == "write_state":
+            for p in PAGED:
+                for pos in range(op["l_buf"]):
+                    page = op["table"][pos // PAGE_SIZE]
+                    pool[p][:, page, pos % PAGE_SIZE] = dense[p][:, 0, pos]
+            for p in LEAVES:
+                if p not in PAGED:
+                    pool[p][:, op["slot"]] = dense[p][:, 0]
+        elif op["op"] == "scatter_chunk":
+            for p in PAGED:
+                for pos in range(op["start"], op["start"] + op["length"]):
+                    page = op["table"][pos // PAGE_SIZE]
+                    pool[p][:, page, pos % PAGE_SIZE] = dense[p][:, 0, pos]
+        elif op["op"] == "scatter_token":
+            for p in PAGED:
+                for row, pos in enumerate(op["pos"]):
+                    page = op["tables"][row][pos // PAGE_SIZE]
+                    pool[p][:, page, pos % PAGE_SIZE] = dense[p][:, row, pos]
+            for p in LEAVES:
+                if p not in PAGED:
+                    pool[p] = dense[p].copy()   # decode replaces wholesale
+    return pool
+
+
+def gather_reference(pool: dict, tables) -> dict:
+    """Dense view of ``tables`` rows, one position at a time by hand."""
+    out = {}
+    for p in PAGED:
+        full = LEAVES[p]
+        got = np.empty((full[0], len(tables), DENSE_LEN) + tuple(full[3:]),
+                       np.float32)
+        for row, trow in enumerate(tables):
+            for pos in range(DENSE_LEN):
+                got[:, row, pos] = pool[p][:, trow[pos // PAGE_SIZE],
+                                           pos % PAGE_SIZE]
+        out[p] = got
+    return out
+
+
 def main() -> dict:
     pool = {p: leaf_values(p, s, seed=0) for p, s in sorted(LEAVES.items())}
-    for slot, sseed in SCRIPT:
-        for p, s in sorted(LEAVES.items()):
-            src = leaf_values(p, request_shape(p, s), seed=sseed)
-            if p == "enc_out":
-                pool[p][slot] = src[0]          # dense reference scatter
-            else:
-                pool[p][:, slot] = src[:, 0]
-    reads = {}
-    for slot in range(N_SLOTS):
-        for p in sorted(LEAVES):
-            got = (pool[p][slot:slot + 1] if p == "enc_out"
-                   else pool[p][:, slot:slot + 1])   # dense reference gather
-            reads[f"slot{slot}.{p}"] = crc(got)
+    pool = apply_script(pool)
+    gathers = [gather_reference(pool, t) for t in GATHERS]
     return {
         "n_slots": N_SLOTS,
-        "max_len": MAX_LEN,
+        "page_size": PAGE_SIZE,
+        "n_pages": N_PAGES,
+        "max_pages": MAX_PAGES,
         "leaves": {p: list(s) for p, s in sorted(LEAVES.items())},
-        "script": [list(op) for op in SCRIPT],
-        "pool_crc": {p: crc(a) for p, a in pool.items()},
-        "read_crc": reads,
+        "paged": list(PAGED),
+        "script": SCRIPT,
+        "gathers": GATHERS,
+        "pool": {p: pool[p].tolist() for p in sorted(pool)},
+        "pool_crc": {p: crc(pool[p]) for p in sorted(pool)},
+        "gather": [{p: g[p].tolist() for p in sorted(g)} for g in gathers],
+        "gather_crc": [{p: crc(g[p]) for p in sorted(g)} for g in gathers],
     }
 
 

@@ -1,16 +1,24 @@
 """Deterministic simulation rig for the serving engine.
 
-The engine's scheduling/batching/slot logic is model-agnostic behind the
-``ModelRunner`` duck type (``repro.serving.engine``), so it can be driven
-here by :class:`StubRunner` — a pure-Python "language model" whose next
-token is a hash of ``(prompt bytes, absolute position)`` — with zero jax
-compilation.  That makes every engine behaviour (admission order,
-mid-decode joins, retirement, slot reuse, starvation-freedom) assertable
-in milliseconds, and the hash's key property drives the invariance tests:
-the token stream depends ONLY on the request's own prompt and position,
-never on which slot it landed in or who shared the batch — exactly the
-bit-exactness contract the real ``TransformerRunner`` is proven to honor
-in ``tests/test_serving_numerics.py``.
+The engine's scheduling/batching/paging logic is model-agnostic behind
+the ``ModelRunner`` duck type (``repro.serving.engine``), so it can be
+driven here by :class:`StubRunner` — a pure-Python "language model" whose
+next token is a hash of the FULL context (prompt plus every token
+generated so far) — with zero jax compilation.
+
+The stub is a real differential probe for the paged KV cache: its "KV
+pages" store the context tokens themselves (as ``token + 1``, so 0 means
+*empty cell*), and every decode step **reconstructs the context by
+reading back through the page tables** before hashing it.  Any paging
+bug — two live requests sharing a page, a wrong page-table entry, a
+freed page reused without re-zeroing, a chunk landing at the wrong
+offset — corrupts the reconstructed context and flips the emitted
+tokens, so the bit-equality assertions in ``tests/test_serving_paging.py``
+catch it.  The hash's key property still drives the invariance tests:
+the token stream depends ONLY on the request's own prompt, never on
+which row/pages it landed in or who shared the batch — exactly the
+bit-exactness contract the real ``TransformerRunner`` honors in
+``tests/test_serving_numerics.py``.
 
 Time is a :class:`repro.serving.FakeClock` advanced by the script, so
 aging/starvation behaviour is exact, not wall-clock-flaky.
@@ -21,77 +29,149 @@ import zlib
 
 import numpy as np
 
-from repro.serving import Engine, FakeClock, TierSpec
+from repro.serving import Engine, FakeClock, TierSpec, pages_for
 
 
-def stub_token(prompt: np.ndarray, pos: int, vocab: int = 97) -> int:
-    """The stub LM: next token after absolute position ``pos`` given
-    ``prompt`` — a pure function of (prompt, pos), slot/batch-agnostic."""
-    h = zlib.crc32(np.asarray(prompt, np.int32).tobytes())
-    return int((h + 2654435761 * (pos + 1)) % vocab)
+def stub_token(context, vocab: int = 97) -> int:
+    """The stub LM: greedy next token given the FULL ``context`` (prompt
+    plus generated-so-far) — a pure function of the context bits,
+    slot/page/batch-agnostic."""
+    h = zlib.crc32(np.asarray(context, np.int32).tobytes())
+    return int((h ^ (h >> 7)) % vocab)
 
 
 def stub_reference(prompt, n: int, vocab: int = 97) -> np.ndarray:
-    """The solo-generate reference: ``n`` greedy tokens for ``prompt``.
-    Token k conditions through absolute position ``len(prompt) - 1 + k``
-    (k=0 is the prefill token), mirroring the engine's position
-    bookkeeping."""
-    prompt = np.asarray(prompt, np.int32)
-    L = prompt.shape[0]
-    return np.asarray([stub_token(prompt, L - 1 + k, vocab)
-                       for k in range(n)], np.int32)
+    """The solo-generate reference: ``n`` greedy tokens for ``prompt``
+    (k=0 is the prefill token; each later token conditions on everything
+    before it, mirroring autoregressive decode)."""
+    ctx = list(np.asarray(prompt, np.int32))
+    out = []
+    for _ in range(n):
+        t = stub_token(ctx, vocab)
+        out.append(t)
+        ctx.append(t)
+    return np.asarray(out, np.int32)
 
 
 class StubRunner:
-    """A ``ModelRunner`` with no model: per-slot state is just the
-    request's prompt, and decode hashes (prompt, pos) per active slot.
-    Records every prefill/decode call for white-box assertions."""
+    """A paged ``ModelRunner`` with no model: the page pool is a plain
+    ``(n_pages, page_size)`` int array holding context tokens as
+    ``token + 1`` (0 = empty cell), and every prefill chunk / decode step
+    writes and then re-reads the context THROUGH the page tables.
 
-    def __init__(self, n_slots: int = 4, max_len: int = 64, vocab: int = 97):
+    Hard invariants asserted inline (they make paging bugs loud even
+    when the token comparison would happen to pass):
+
+    - no write ever lands in the null page (``n_pages``);
+    - a write only ever lands in an EMPTY cell — the engine must have
+      re-zeroed freed pages before reuse, so stale bits from a previous
+      occupant trip the assert;
+    - the re-read context has no holes (every cell of the live prefix is
+      populated).
+
+    Records every prefill/decode call for white-box assertions.
+    """
+
+    def __init__(self, n_slots: int = 4, max_len: int = 64, *,
+                 page_size: int = 4, pages=None, prefill_chunk: int = 32,
+                 vocab: int = 97):
         self.n_slots = n_slots
         self.max_len = max_len
+        self.page_size = page_size
+        self.max_pages = pages_for(max_len, page_size)
+        self.n_pages = int(pages if pages is not None
+                           else n_slots * self.max_pages)
+        self.prefill_chunk = prefill_chunk
+        self.chunked = True
         self.vocab = vocab
-        self.slots = {}                 # slot -> prompt array
-        self.prefill_calls = []         # list of prompt copies
-        self.decode_calls = []          # list of (tokens, pos) copies
+        self.store = np.zeros((self.n_pages, page_size), np.int64)
+        self.prefill_calls = []  # (prompt, start, end) per chunk
+        self.decode_calls = []   # (tokens, pos) per decode batch
+        self.decode_tables = []  # page tables per decode batch
 
-    def prefill(self, prompt):
+    def pages_for(self, n_positions: int) -> int:
+        return pages_for(n_positions, self.page_size)
+
+    # -- paged context store -------------------------------------------------
+
+    def _write(self, table_row, pos: int, token: int) -> None:
+        page = int(table_row[pos // self.page_size])
+        off = pos % self.page_size
+        assert page != self.n_pages, \
+            f"write at position {pos} routed to the null page"
+        cell = self.store[page, off]
+        assert cell == 0, (
+            f"stale bits: page {page} offset {off} still holds token "
+            f"{cell - 1} — freed pages must be re-zeroed before reuse")
+        self.store[page, off] = token + 1
+
+    def _read_context(self, table_row, n: int) -> np.ndarray:
+        pages = np.asarray(table_row[:self.pages_for(n)], int)
+        flat = self.store[pages].reshape(-1)[:n]
+        assert (flat > 0).all(), \
+            "context hole: empty cell inside the live prefix"
+        return (flat - 1).astype(np.int64)
+
+    # -- ModelRunner protocol ------------------------------------------------
+
+    def prefill_chunk_step(self, prompt, start: int, end: int, table_row):
         prompt = np.asarray(prompt, np.int32)
-        self.prefill_calls.append(prompt.copy())
-        return (stub_token(prompt, prompt.shape[0] - 1, self.vocab),
-                {"prompt": prompt.copy()})
+        self.prefill_calls.append((prompt.copy(), int(start), int(end)))
+        for i in range(int(start), int(end)):
+            self._write(table_row, i, int(prompt[i]))
+        if int(end) == prompt.shape[0]:
+            ctx = self._read_context(table_row, int(end))
+            np.testing.assert_array_equal(ctx, prompt)  # paging round-trip
+            return stub_token(ctx, self.vocab)
+        return None
 
-    def write_slot(self, slot: int, state) -> None:
-        self.slots[slot] = state["prompt"]
+    def prefill_full(self, slot: int, prompt, table_row):
+        # the stub has no recurrent state; exercise the same paged writes
+        return self.prefill_chunk_step(prompt, 0,
+                                       np.asarray(prompt).shape[0], table_row)
 
-    def decode(self, tokens, pos):
+    def decode(self, tokens, pos, tables):
         tokens = np.asarray(tokens, np.int32)
         pos = np.asarray(pos, np.int32)
+        tables = np.asarray(tables, np.int32)
         self.decode_calls.append((tokens.copy(), pos.copy()))
+        self.decode_tables.append(tables.copy())
         out = np.zeros(self.n_slots, np.int32)
-        for slot, prompt in self.slots.items():
-            out[slot] = stub_token(prompt, int(pos[slot]), self.vocab)
+        for slot in range(self.n_slots):
+            if tables[slot, 0] == self.n_pages:  # inactive row: null table
+                continue
+            self._write(tables[slot], int(pos[slot]), int(tokens[slot]))
+            ctx = self._read_context(tables[slot], int(pos[slot]) + 1)
+            out[slot] = stub_token(ctx, self.vocab)
         return out
+
+    def zero_pages(self, pages) -> None:
+        for p in pages:
+            self.store[int(p)] = 0
 
 
 def make_stub_engine(tiers=(TierSpec("a"),), slots: int = 2,
-                     max_len: int = 64, aging=None):
+                     max_len: int = 64, aging=None, *, page_size: int = 4,
+                     pages=None, prefill_chunk: int = 32):
     """One stub lane per tier -> (engine, clock, {tier: StubRunner})."""
     clock = FakeClock()
-    runners = {t.name: StubRunner(n_slots=slots, max_len=max_len)
+    runners = {t.name: StubRunner(n_slots=slots, max_len=max_len,
+                                  page_size=page_size, pages=pages,
+                                  prefill_chunk=prefill_chunk)
                for t in tiers}
     eng = Engine(runners, tiers, clock=clock, aging=aging)
     return eng, clock, runners
 
 
 def run_scripted(eng: Engine, clock: FakeClock, script,
-                 dt: float = 1.0, max_steps: int = 10_000):
+                 dt: float = 1.0, max_steps: int = 10_000, on_step=None):
     """Drive the engine through a scripted arrival schedule.
 
     ``script`` is an iterable of per-step submission lists: at step i the
     clock advances by ``dt``, every kwargs dict in ``script[i]`` is
     submitted, then the engine steps once.  After the script runs out the
-    engine drains (still advancing the clock).  Returns
+    engine drains (still advancing the clock).  ``on_step(eng)``, when
+    given, runs after every step (invariant checkers).  Returns
     ``(requests, events)`` in submission/emission order.
     """
     reqs, events = [], []
@@ -100,11 +180,15 @@ def run_scripted(eng: Engine, clock: FakeClock, script,
         for kw in submits:
             reqs.append(eng.submit(**kw))
         events.extend(eng.step())
+        if on_step is not None:
+            on_step(eng)
     steps = 0
     while not eng.idle:
         if steps >= max_steps:
             raise AssertionError(f"engine did not drain in {max_steps} steps")
         clock.advance(dt)
         events.extend(eng.step())
+        if on_step is not None:
+            on_step(eng)
         steps += 1
     return reqs, events

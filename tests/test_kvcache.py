@@ -1,11 +1,15 @@
-"""KV-pool unit tests: slot allocator + scatter/gather golden fixtures.
+"""KV-cache unit tests: slot allocator + paged scatter/gather goldens.
 
 The allocator contract is host-side and structural (exhaustion is a
 :class:`ServingError` at admission time, never an XLA shape error
-mid-step).  The data-movement contract is bit-exact: ``write_slot`` /
-``read_slot`` are replayed over the synthetic pool pinned by
-``tests/golden/gen_kvcache_golden.py`` (an independent dense-numpy
-reference) and checked by CRC, then round-tripped through a REAL
+mid-step; the page allocator's reservation contract is covered in
+``tests/test_serving_paging.py``).  The data-movement contract is
+bit-exact: ``write_state`` / ``scatter_chunk`` / ``scatter_token`` /
+``zero_pages`` / ``gather_state`` are replayed over the synthetic paged
+pool pinned by ``tests/golden/gen_kvcache_golden.py`` — an independent
+dense-numpy reference whose page-table indirection is done by hand, one
+position at a time — and compared leaf-for-leaf with
+``assert_array_equal`` plus CRC pins, then round-tripped through a REAL
 prefilled transformer state to prove the synthetic shapes did not cheat.
 """
 import json
@@ -15,14 +19,15 @@ import zlib
 import numpy as np
 import pytest
 
-from repro.serving import ServingError, SlotAllocator, pool_init, read_slot, \
-    write_slot
+from repro.serving import ServingError, SlotAllocator, gather_state, \
+    paged_layout, paged_pool_init, scatter_chunk, scatter_token, \
+    write_state, zero_pages
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
 
 # ---------------------------------------------------------------------------
-# slot allocator
+# slot (decode-row) allocator
 # ---------------------------------------------------------------------------
 
 def test_alloc_is_lowest_free_slot_first():
@@ -54,7 +59,7 @@ def test_allocator_misuse_raises():
 
 
 # ---------------------------------------------------------------------------
-# scatter/gather vs the dense reference (golden fixture)
+# paged scatter/gather vs the hand-indirected dense reference (golden)
 # ---------------------------------------------------------------------------
 
 def _golden():
@@ -73,66 +78,110 @@ def _crc(a):
                       .tobytes())
 
 
-def _build_pool(leaves, seed):
-    """Assemble the synthetic pool pytree (the transformer serving-state
-    shape: layers list of per-phase leaf dicts, slot axis 1; enc_out slot
-    axis 0) from ``layers.{i}.{phase}.{name}`` leaf paths."""
-    import jax.numpy as jnp
-
+def _as_tree(flat):
+    """Assemble the pool/state pytree (layers list of per-phase leaf
+    dicts) from ``layers.{i}.{phase}.{name}`` leaf paths."""
     layers = {}
-    pool = {}
-    for path, shape in leaves.items():
-        if path == "enc_out":
-            pool["enc_out"] = jnp.asarray(_leaf_values(path, shape, seed))
-            continue
+    for path, arr in flat.items():
         _, i, phase, name = path.split(".")
-        layers.setdefault(int(i), {}).setdefault(int(phase), {})[name] = \
-            jnp.asarray(_leaf_values(path, shape, seed))
-    pool["layers"] = [layers[i] for i in sorted(layers)]
-    return pool
+        layers.setdefault(int(i), {}).setdefault(int(phase), {})[name] = arr
+    return {"layers": [layers[i] for i in sorted(layers)]}
 
 
-def _flatten(pool):
+def _flatten(tree):
     out = {}
-    for i, seg in enumerate(pool["layers"]):
+    for i, seg in enumerate(tree["layers"]):
         for phase, leaves in seg.items():
             for name, leaf in leaves.items():
                 out[f"layers.{i}.{phase}.{name}"] = leaf
-    if "enc_out" in pool:
-        out["enc_out"] = pool["enc_out"]
     return out
 
 
-def test_write_slot_matches_dense_reference():
-    g = _golden()
-    leaves = {p: tuple(s) for p, s in g["leaves"].items()}
-    pool = _build_pool(leaves, seed=0)
-    for slot, sseed in g["script"]:
-        req_shapes = {
-            p: tuple(1 if i == (0 if p == "enc_out" else 1) else d
-                     for i, d in enumerate(s))
-            for p, s in leaves.items()}
-        state = _build_pool(req_shapes, seed=sseed)
-        pool = write_slot(pool, slot, state)
-    got = {p: _crc(a) for p, a in _flatten(pool).items()}
-    assert got == g["pool_crc"]
+def _layout(g):
+    """The paged-phase layout the golden leaves imply: phase ``pi`` of
+    segment ``si`` pages iff some ``paged`` leaf path lives there."""
+    n_seg = 1 + max(int(p.split(".")[1]) for p in g["leaves"])
+    paged = [set() for _ in range(n_seg)]
+    for p in g["paged"]:
+        _, i, phase, _ = p.split(".")
+        paged[int(i)].add(int(phase))
+    return tuple(frozenset(s) for s in paged)
 
 
-def test_read_slot_matches_dense_reference():
+def _replay(g):
+    """Drive the scripted ops through the real kvcache functions."""
+    import jax.numpy as jnp
+
+    ps = g["page_size"]
+    layout = _layout(g)
+    pool = _as_tree({p: jnp.asarray(_leaf_values(p, tuple(s), 0))
+                     for p, s in g["leaves"].items()})
+    for op in g["script"]:
+        if op["op"] == "zero_pages":
+            pool = zero_pages(pool, layout, op["pages"])
+            continue
+        dense = _as_tree({p: jnp.asarray(_leaf_values(p, tuple(s),
+                                                      op["seed"]))
+                          for p, s in op["dense"].items()})
+        if op["op"] == "write_state":
+            pool = write_state(pool, layout, dense, op["slot"],
+                               jnp.asarray(op["table"], jnp.int32), ps)
+        elif op["op"] == "scatter_chunk":
+            pool = scatter_chunk(pool, layout, dense,
+                                 jnp.asarray(op["table"], jnp.int32),
+                                 op["start"], op["length"], ps)
+        elif op["op"] == "scatter_token":
+            pool = scatter_token(pool, layout, dense,
+                                 jnp.asarray(op["tables"], jnp.int32),
+                                 jnp.asarray(op["pos"], jnp.int32), ps)
+        else:  # a regenerated fixture must not outrun this replayer
+            raise AssertionError(f"unknown golden op {op['op']!r}")
+    return pool
+
+
+def test_paged_script_matches_dense_reference():
     g = _golden()
-    leaves = {p: tuple(s) for p, s in g["leaves"].items()}
-    pool = _build_pool(leaves, seed=0)
-    for slot, sseed in g["script"]:
-        req_shapes = {
-            p: tuple(1 if i == (0 if p == "enc_out" else 1) else d
-                     for i, d in enumerate(s))
-            for p, s in leaves.items()}
-        pool = write_slot(pool, slot, _build_pool(req_shapes, seed=sseed))
-    got = {}
-    for slot in range(g["n_slots"]):
-        for p, leaf in _flatten(read_slot(pool, slot)).items():
-            got[f"slot{slot}.{p}"] = _crc(leaf)
-    assert got == g["read_crc"]
+    flat = _flatten(_replay(g))
+    assert set(flat) == set(g["pool"])
+    for p, want in g["pool"].items():
+        np.testing.assert_array_equal(
+            np.asarray(flat[p]), np.asarray(want, np.float32), err_msg=p)
+    assert {p: _crc(a) for p, a in flat.items()} == g["pool_crc"]
+
+
+def test_gather_state_matches_dense_reference():
+    import jax.numpy as jnp
+
+    g = _golden()
+    pool = _replay(g)
+    layout = _layout(g)
+    pool_flat = _flatten(pool)
+    for tables, want, want_crc in zip(g["gathers"], g["gather"],
+                                      g["gather_crc"]):
+        got = _flatten(gather_state(pool, layout,
+                                    jnp.asarray(tables, jnp.int32)))
+        for p in g["paged"]:
+            np.testing.assert_array_equal(
+                np.asarray(got[p]), np.asarray(want[p], np.float32),
+                err_msg=f"{tables}: {p}")
+            assert _crc(got[p]) == want_crc[p]
+        for p in g["leaves"]:            # per-slot leaves pass through
+            if p not in g["paged"]:
+                np.testing.assert_array_equal(np.asarray(got[p]),
+                                              np.asarray(pool_flat[p]))
+
+
+def test_paged_layout_pages_attention_but_not_ssm():
+    from repro.configs import get_arch
+
+    qwen = get_arch("qwen3-4b").reduced()
+    assert all(len(paged) == len(pattern) for paged, (_, pattern)
+               in zip(paged_layout(qwen), qwen.segments))
+    hybrid = get_arch("zamba2-7b").reduced()
+    layout = paged_layout(hybrid)
+    n_paged = sum(len(s) for s in layout)
+    n_total = sum(len(pattern) for _, pattern in hybrid.segments)
+    assert 0 < n_paged < n_total         # attention pages, SSM stays per-slot
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +190,7 @@ def test_read_slot_matches_dense_reference():
 
 def test_real_state_round_trip_is_bit_exact(rng):
     import jax
+    import jax.numpy as jnp
 
     from repro.configs import get_arch
     from repro.models import transformer
@@ -148,30 +198,40 @@ def test_real_state_round_trip_is_bit_exact(rng):
 
     cfg = get_arch("qwen3-4b").reduced()
     params, _ = unzip(transformer.init(cfg, jax.random.PRNGKey(0)))
-    max_len = 16
+    page_size, n_pages, null = 4, 6, 6
+    layout = paged_layout(cfg)
+    pool = paged_pool_init(cfg, 2, n_pages, page_size)
 
-    def prefilled(L, seed_off):
+    def prefilled(L):
         toks = rng.integers(0, cfg.vocab, (1, L))
         _, state = transformer.prefill(
-            params, cfg, {"tokens": np.asarray(toks, np.int32)},
-            max_len=max_len)
+            params, cfg, {"tokens": np.asarray(toks, np.int32)}, max_len=8)
         return state
 
-    pool = pool_init(cfg, 3, max_len)
-    s_a, s_b = prefilled(5, 0), prefilled(7, 1)
-    pool = write_slot(pool, 2, s_a)
-    pool = write_slot(pool, 0, s_b)
+    def rows_match(dense, row, state):
+        # the gathered row's buffered prefix vs the original state, leaf
+        # by leaf (everything in qwen3 is attention, hence paged)
+        for got, want in zip(jax.tree.leaves(_flatten(dense)),
+                             jax.tree.leaves(_flatten(state))):
+            np.testing.assert_array_equal(
+                np.asarray(got[:, row:row + 1, :want.shape[2]]),
+                np.asarray(want.astype(got.dtype)))
 
-    def leaves(state):
-        return jax.tree.leaves(state["layers"])
+    # two states installed through FRAGMENTED out-of-order page tables
+    s_a, s_b = prefilled(5), prefilled(7)
+    t_a = jnp.asarray([5, 2, null, null], jnp.int32)
+    t_b = jnp.asarray([3, 0, null, null], jnp.int32)
+    pool = write_state(pool, layout, s_a, 0, t_a, page_size)
+    pool = write_state(pool, layout, s_b, 1, t_b, page_size)
+    dense = gather_state(pool, layout, jnp.stack([t_a, t_b]))
+    rows_match(dense, 0, s_a)
+    rows_match(dense, 1, s_b)
 
-    for got, want in zip(leaves(read_slot(pool, 2)), leaves(s_a)):
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-    for got, want in zip(leaves(read_slot(pool, 0)), leaves(s_b)):
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-    # overwrite slot 2: the new occupant's state comes back exactly — no
-    # stale bits from s_a survive anywhere in the slot
-    s_c = prefilled(3, 2)
-    pool = write_slot(pool, 2, s_c)
-    for got, want in zip(leaves(read_slot(pool, 2)), leaves(s_c)):
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # overwrite the OCCUPIED pages 5 and 2 (reversed order): the new
+    # occupant's bits come back exactly, the other request is untouched
+    s_c = prefilled(6)
+    t_c = jnp.asarray([2, 5, null, null], jnp.int32)
+    pool = write_state(pool, layout, s_c, 0, t_c, page_size)
+    dense = gather_state(pool, layout, jnp.stack([t_c, t_b]))
+    rows_match(dense, 0, s_c)
+    rows_match(dense, 1, s_b)

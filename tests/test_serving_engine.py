@@ -294,7 +294,10 @@ def test_lanes_are_independent_per_tier():
     assert a.admit_step == b.admit_step == 1
     np.testing.assert_array_equal(a.result(), stub_reference([1, 2], 3))
     np.testing.assert_array_equal(b.result(), stub_reference([3, 4], 3))
-    assert runners["fast"].slots.keys() == runners["slow"].slots.keys() == {0}
+    # each lane served its request on its own row 0 of its own page pool
+    assert a.slot == b.slot == 0
+    assert len(runners["fast"].prefill_calls) == 1
+    assert len(runners["slow"].prefill_calls) == 1
 
 
 def test_run_raises_structured_error_on_bound():
@@ -360,18 +363,29 @@ def test_engine_drains_identical_content_requests():
 
 
 def test_prefill_cache_is_lru_bounded():
+    # the compiled-prefill cache is keyed per CHUNK shape (not per prompt
+    # length) and each entry owns a private jit wrapper, so eviction
+    # actually drops the executable
     from repro.serving.engine import TransformerRunner
     from repro.session import Session
 
     sess = Session("qwen3-4b")
     runner = TransformerRunner(sess.config, sess.params, 1, 16,
-                               prefill_cache_size=2)
-    for L in (2, 3, 4):               # third distinct length evicts the LRU
-        runner.prefill(np.arange(1, L + 1, dtype=np.int32))
-    assert list(runner._prefill) == [3, 4]
-    runner.prefill(np.arange(1, 4, dtype=np.int32))   # hit refreshes 3
-    runner.prefill(np.arange(1, 6, dtype=np.int32))   # new 5 evicts 4
-    assert list(runner._prefill) == [3, 5]
+                               page_size=4, prefill_cache_size=2)
+    row = np.arange(runner.max_pages, dtype=np.int32)  # pages 0..max_pages-1
+    for c in (2, 3, 4):               # third distinct chunk shape evicts LRU
+        runner.prefill_chunk_step(np.arange(1, c + 1, dtype=np.int32),
+                                  0, c, row)
+    assert list(runner._prefill) == [("chunk", 3), ("chunk", 4)]
+    # hit refreshes the 3-chunk; a new 5-chunk then evicts the 4-chunk
+    runner.prefill_chunk_step(np.arange(1, 4, dtype=np.int32), 0, 3, row)
+    runner.prefill_chunk_step(np.arange(1, 6, dtype=np.int32), 0, 5, row)
+    assert list(runner._prefill) == [("chunk", 3), ("chunk", 5)]
+    # prompts sharing a chunk shape share the executable: a length-7
+    # prompt chunked at 5 reuses ("chunk", 5) and adds only the tail
+    runner.prefill_chunk_step(np.arange(1, 8, dtype=np.int32), 0, 5, row)
+    runner.prefill_chunk_step(np.arange(1, 8, dtype=np.int32), 5, 7, row)
+    assert list(runner._prefill) == [("chunk", 5), ("chunk", 2)]
     with pytest.raises(ServingError, match="prefill_cache_size"):
         TransformerRunner(sess.config, sess.params, 1, 16,
                           prefill_cache_size=0)

@@ -92,6 +92,44 @@ def test_late_arrivals_bit_equal_to_solo(lm_session, rng):
     _check_against_solo(lm_session, reqs)
 
 
+def test_chunked_prefill_long_prompt_bit_equal_to_solo(lm_session, rng):
+    """The acceptance scenario for paged serving: mixed exact/segmented
+    tiers, a prompt LONGER than ``prefill_chunk`` (so it prefills in
+    pieces across engine steps, interleaved with live decode), scripted
+    late arrivals landing mid-flight, and a small page pool — every
+    request still bit-equals its solo generate, and the stats prove the
+    chunking actually happened (this is not the whole-prompt fallback)."""
+    from repro.serving import FakeClock, pages_for
+
+    clock = FakeClock()
+    eng = lm_session.serving_engine(TIERS, slots=2, max_len=32,
+                                    page_size=4, prefill_chunk=5,
+                                    clock=clock)
+    vocab = lm_session.config.vocab
+    long_prompt = rng.integers(0, vocab, 13)   # 13 > prefill_chunk=5
+    script = [
+        [dict(prompt=rng.integers(0, vocab, 4), tier="premium",
+              max_new_tokens=8)],
+        [dict(prompt=long_prompt, tier="premium", max_new_tokens=4)],
+        [],
+        [dict(prompt=rng.integers(0, vocab, 6), tier="bulk",
+              max_new_tokens=5),
+         dict(prompt=rng.integers(0, vocab, 3), tier="bulk",
+              max_new_tokens=6)],
+    ]
+    reqs, _ = run_scripted(eng, clock, script)
+    assert all(r.done for r in reqs)
+    _check_against_solo(lm_session, reqs)
+
+    prem = eng.lane_stats()["premium"]
+    assert prem.n_prefill_chunks >= 1 + 3      # short (1) + long (ceil 13/5)
+    assert prem.n_interleave_steps >= 1        # chunks ran beside decode
+    assert prem.n_decode_stall_steps == 0      # prefill never starved decode
+    # paged reservations, not whole-max_len slots: the 4-token prompt
+    # reserved pages for 4 + 8 - 1 = 11 positions, not 32
+    assert reqs[0].n_reserved_pages == pages_for(4 + 8 - 1, 4)
+
+
 def test_eos_bit_equal_to_solo_generate(lm_session, rng):
     """EOS early-stopping in the engine lands exactly the tokens a solo
     ``Session.generate`` with the same ``eos_id`` keeps (its pre-padding

@@ -1,0 +1,270 @@
+"""Differential tests for the paged KV cache under memory pressure.
+
+The :class:`tests.serving_sim.StubRunner` stores the context tokens
+themselves in its pages and reconstructs every request's context through
+the page tables before emitting a token, so these tests are *differential*:
+a paging bug (shared page, stale bits, wrong indirection, chunk at the
+wrong offset) corrupts the reconstructed context and flips tokens.
+
+The hypothesis property sweeps random arrival schedules, prompt lengths,
+``page_size``, ``prefill_chunk`` and pool sizes, asserting the three
+paged-serving invariants:
+
+(a) emitted tokens are bit-identical to solo generate (``stub_reference``);
+(b) no physical page is ever referenced by two live requests;
+(c) freed pages are re-zeroed before reuse (no stale-bit leaks) — the
+    stub hard-asserts this on every write, and the drained pool must be
+    all-zeros.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import ServingError, TierSpec, pages_for
+
+from serving_sim import make_stub_engine, run_scripted, stub_reference
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # bare environment: deterministic tests still run
+    HAVE_HYPOTHESIS = False
+
+
+MAX_LEN = 24
+
+
+def _live_page_checker(max_steps_tables=None):
+    """An ``on_step`` hook asserting invariant (b) after every step: the
+    union of page tables across live (prefilling + active) requests has
+    no duplicates, and the allocator's view agrees."""
+
+    def check(eng):
+        for lane in eng._lanes.values():
+            held = []
+            for req in list(lane.prefilling.values()) + list(lane.active.values()):
+                held.extend(req.pages)
+            assert len(held) == len(set(held)), \
+                f"page referenced by two live requests: {sorted(held)}"
+            assert sorted(held) == sorted(lane.pages.owners), \
+                "allocator and request page tables disagree"
+            assert all(0 <= p < lane.runner.n_pages for p in held)
+
+    return check
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def paged_workloads(draw):
+        page_size = draw(st.integers(1, 5))
+        slots = draw(st.integers(1, 3))
+        max_pages = pages_for(MAX_LEN, page_size)
+        # at least one full-size request must fit; less than
+        # slots*max_pages creates genuine page pressure (admission blocks
+        # on pages, not rows)
+        pages = draw(st.integers(max_pages, slots * max_pages))
+        prefill_chunk = draw(st.integers(1, 8))
+        n_req = draw(st.integers(1, 6))
+        reqs = []
+        for _ in range(n_req):
+            prompt_len = draw(st.integers(1, 12))
+            max_new = draw(st.integers(1, MAX_LEN + 1 - prompt_len))
+            step = draw(st.integers(0, 6))
+            reqs.append((step, prompt_len, max_new))
+        return dict(page_size=page_size, slots=slots, pages=pages,
+                    prefill_chunk=prefill_chunk, reqs=reqs)
+
+    @settings(max_examples=60, deadline=None)
+    @given(paged_workloads(), st.integers(0, 2 ** 31 - 1))
+    def test_paged_serving_invariants(wl, seed):
+        rng = np.random.default_rng(seed)
+        eng, clock, runners = make_stub_engine(
+            slots=wl["slots"], max_len=MAX_LEN, page_size=wl["page_size"],
+            pages=wl["pages"], prefill_chunk=wl["prefill_chunk"])
+        stub = runners["a"]
+        prompts = [rng.integers(0, 97, L).astype(np.int32)
+                   for _, L, _ in wl["reqs"]]
+        n_steps = max(s for s, _, _ in wl["reqs"]) + 1
+        script = [[] for _ in range(n_steps)]
+        for (step, _, max_new), prompt in zip(wl["reqs"], prompts):
+            script[step].append(dict(prompt=prompt, max_new_tokens=max_new))
+        reqs, _ = run_scripted(eng, clock, script,
+                               on_step=_live_page_checker())
+        assert len(reqs) == len(prompts)
+        # (a) bit-identical to solo generate under any schedule/pressure
+        # (reqs come back in submission order, so reference each against
+        # its OWN prompt)
+        for req in reqs:
+            np.testing.assert_array_equal(
+                req.result(),
+                stub_reference(req.prompt, req.max_new_tokens))
+        # (c) every page was released and re-zeroed after the drain
+        assert (stub.store == 0).all()
+        assert stub.n_pages == eng._lanes["a"].pages.n_free_pages
+        # reservations were sized to the true need, never whole-max_len
+        s = eng._lanes["a"].stats
+        want_pages = sum(
+            pages_for(req.prompt.shape[0] + req.max_new_tokens - 1,
+                      wl["page_size"]) for req in reqs)
+        assert s.pages_reserved_sum == want_pages
+        assert s.n_decode_stall_steps == 0
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_paged_serving_invariants():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# deterministic regressions
+# ---------------------------------------------------------------------------
+
+def test_two_short_requests_share_one_long_requests_capacity():
+    # the admission over-reservation regression: the pool holds exactly
+    # the pages ONE whole-max_len request would consume; under whole-slot
+    # accounting the second short request would wait, under page
+    # accounting both admit concurrently
+    eng, clock, _ = make_stub_engine(slots=2, max_len=16, page_size=4,
+                                     pages=4)
+    a = eng.submit(np.arange(1, 4), max_new_tokens=4)    # need 6 -> 2 pages
+    b = eng.submit(np.arange(4, 9), max_new_tokens=4)    # need 8 -> 2 pages
+    run_scripted(eng, clock, [])
+    assert a.admit_step == b.admit_step == 1
+    assert a.n_reserved_pages == b.n_reserved_pages == 2
+    np.testing.assert_array_equal(a.result(), stub_reference(np.arange(1, 4), 4))
+    np.testing.assert_array_equal(b.result(), stub_reference(np.arange(4, 9), 4))
+
+
+def test_page_pressure_serializes_when_pages_exhausted():
+    # same pool, but a full-max_len request takes all 4 pages: the short
+    # request has a free ROW yet must wait for pages
+    eng, clock, _ = make_stub_engine(slots=2, max_len=16, page_size=4,
+                                     pages=4)
+    big = eng.submit(np.arange(1, 9), max_new_tokens=9)   # need 16 -> 4 pages
+    small = eng.submit(np.arange(9, 12), max_new_tokens=2)  # 1 page
+    run_scripted(eng, clock, [])
+    assert big.admit_step == 1
+    assert small.admit_step > big.finish_step or small.admit_step > 1
+    assert small.admit_step == big.finish_step + 1
+    np.testing.assert_array_equal(small.result(),
+                                  stub_reference(np.arange(9, 12), 2))
+
+
+def test_admission_is_head_of_line_on_pages():
+    # a big head request whose pages don't fit yet BLOCKS later small
+    # requests of the same priority (no starvation via queue-jumping)
+    eng, clock, _ = make_stub_engine(slots=3, max_len=16, page_size=4,
+                                     pages=4)
+    hog = eng.submit(np.arange(1, 5), max_new_tokens=9, request_id="hog")
+    big = eng.submit(np.arange(1, 9), max_new_tokens=9, request_id="big")
+    small = eng.submit(np.arange(9, 12), max_new_tokens=2,
+                       request_id="small")
+    run_scripted(eng, clock, [])
+    # hog holds 3 pages; big (4 pages) can't admit and blocks small
+    # (1 page would fit!) until hog retires
+    assert hog.admit_step == 1
+    assert big.admit_step > 1 and small.admit_step >= big.admit_step
+    np.testing.assert_array_equal(small.result(),
+                                  stub_reference(np.arange(9, 12), 2))
+
+
+def test_long_prompt_chunks_interleave_with_decode():
+    # a long prompt (3 chunks) joins while a short request decodes: the
+    # short request keeps landing one token per step through every chunk
+    # step — chunked prefill never stalls in-flight decodes
+    eng, clock, _ = make_stub_engine(slots=2, max_len=24, page_size=4,
+                                     prefill_chunk=4)
+    short = eng.submit(np.arange(1, 3), max_new_tokens=12,
+                       request_id="short")
+    script = [[], [dict(prompt=np.arange(1, 11), max_new_tokens=3,
+                        request_id="long")]]
+    reqs, events = run_scripted(eng, clock, script)
+    long = reqs[0]            # the scripted (second) submission
+    # 10-token prompt at chunk 4 -> chunks on steps 2,3,4; first token
+    # lands with the last chunk
+    first_tok_step = min(e.step for e in events
+                        if e.kind == "token" and e.request_id == "long")
+    assert long.admit_step == 2
+    assert first_tok_step == long.admit_step + 2
+    # short landed a decode token on EVERY step of the long prefill
+    short_steps = sorted(e.step for e in events
+                         if e.kind == "token" and e.request_id == "short")
+    assert set(range(2, 5)) <= set(short_steps)
+    np.testing.assert_array_equal(short.result(),
+                                  stub_reference(np.arange(1, 3), 12))
+    np.testing.assert_array_equal(long.result(),
+                                  stub_reference(np.arange(1, 11), 3))
+    stats = eng._lanes["a"].stats
+    assert stats.n_prefill_chunks == 1 + 3     # short (1) + long (3)
+    assert stats.n_interleave_steps == 3       # long's chunks ran alongside
+    assert stats.n_decode_stall_steps == 0
+
+
+def test_short_requests_reserve_small_4x_vs_whole_max_len():
+    # the acceptance ratio: short requests in a long-max_len tier reserve
+    # >= 4x less KV than the whole-max_len slot design would pin
+    eng, clock, _ = make_stub_engine(slots=2, max_len=64, page_size=4)
+    prompts = [np.arange(1, 4), np.arange(2, 6), np.arange(3, 5)]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    run_scripted(eng, clock, [])
+    s = eng._lanes["a"].stats
+    assert s.n_finished == len(prompts)
+    reserved_tokens = s.pages_per_request * 4
+    assert reserved_tokens * 4 <= 64, \
+        f"paged reservation {reserved_tokens} tokens/request is not >=4x " \
+        f"smaller than max_len=64"
+
+
+def test_submit_rejects_requests_larger_than_page_pool():
+    eng, _, _ = make_stub_engine(slots=2, max_len=16, page_size=4, pages=2)
+    with pytest.raises(ServingError, match="pages"):
+        eng.submit(np.arange(1, 9), max_new_tokens=9)  # 4 pages > pool of 2
+
+
+def test_freed_pages_are_rezeroed_and_reused():
+    eng, clock, runners = make_stub_engine(slots=1, max_len=16, page_size=4,
+                                           pages=2)
+    a = eng.submit(np.arange(1, 6), max_new_tokens=3)   # 2 pages
+    run_scripted(eng, clock, [])
+    stub = runners["a"]
+    assert (stub.store == 0).all()          # released AND re-zeroed
+    # the next occupant reuses the same physical pages (lowest-id-first)
+    b = eng.submit(np.arange(6, 11), max_new_tokens=3)
+    run_scripted(eng, clock, [])
+    assert b.done and (stub.store == 0).all()
+    np.testing.assert_array_equal(b.result(),
+                                  stub_reference(np.arange(6, 11), 3))
+
+
+def test_decode_tables_route_inactive_rows_to_null_page():
+    eng, clock, runners = make_stub_engine(slots=3, max_len=16, page_size=4)
+    eng.submit(np.arange(1, 4), max_new_tokens=3)
+    run_scripted(eng, clock, [])
+    stub = runners["a"]
+    for tables in stub.decode_tables:
+        # rows 1/2 never held a request: all-null tables
+        assert (tables[1:] == stub.n_pages).all()
+        # the active row's table is null past its live pages
+        live = tables[0] != stub.n_pages
+        assert live.sum() >= 1 and not live[live.argmin():].any()
+
+
+def test_page_allocator_reservation_accounting():
+    from repro.serving import PageAllocator
+
+    pa = PageAllocator(4)
+    pa.reserve("a", 3)
+    assert pa.n_unreserved == 1 and pa.n_free_pages == 4
+    assert pa.can_reserve(1) and not pa.can_reserve(2)
+    assert [pa.take_page("a") for _ in range(3)] == [0, 1, 2]
+    with pytest.raises(ServingError, match="exceeded its reservation"):
+        pa.take_page("a")
+    with pytest.raises(ServingError, match="already holds"):
+        pa.reserve("a", 1)
+    with pytest.raises(ServingError, match="exhausted"):
+        pa.reserve("b", 2)
+    assert pa.owners == {0: "a", 1: "a", 2: "a"}
+    assert pa.release("a") == [0, 1, 2]
+    assert pa.n_unreserved == pa.n_free_pages == 4
+    with pytest.raises(ServingError, match="no page reservation"):
+        pa.release("a")

@@ -66,6 +66,13 @@ TOLERANCES: dict[str, float] = {
     # reasonable) and wobbles with load; the gate is that the tuned path
     # never becomes drastically slower than the static guess
     "autotuned_vs_static": 0.75,
+    # the paged-KV accounting ratios are deterministic scheduling outputs
+    # (page counts under a fixed workload, no wall-clock), so they gate
+    # much tighter than timing ratios; the stall metric's baseline is 0,
+    # so any stall at all exceeds the band
+    "serving_pages_per_request": 0.10,
+    "serving_kv_reservation_vs_maxlen": 0.10,
+    "serving_longprompt_decode_stall": 0.10,
 }
 
 
